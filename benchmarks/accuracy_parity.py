@@ -1,0 +1,23 @@
+"""Paper Table 2: test accuracy of Cent / StAl / Sim / GLASU-1 / GLASU-4."""
+from .common import BenchSettings, csv, run_method
+
+METHODS = ["cent", "stal", "sim", "glasu1", "glasu4"]
+
+
+def run(datasets=("cora", "suzhou"), seeds=(0,), rounds=None, settings=None):
+    s = settings or BenchSettings()
+    rows = {}
+    for ds in datasets:
+        for m in METHODS:
+            accs, comms = [], []
+            for seed in seeds:
+                q = 4 if m == "glasu4" else 1
+                meth = "glasu" if m.startswith("glasu") else m
+                r = run_method(meth, ds, seed=seed, s=s, q=q, rounds=rounds)
+                accs.append(r.test_acc)
+                comms.append(r.comm_bytes)
+            acc = sum(accs) / len(accs)
+            rows[(ds, m)] = acc
+            csv(f"table2/{ds}/{m}", f"{acc * 100:.1f}",
+                f"comm_MB={comms[0] / 1e6:.1f}")
+    return rows

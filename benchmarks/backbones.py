@@ -1,0 +1,20 @@
+"""Paper Figure 3: GLASU across GCN / GAT / GCNII backbones."""
+import dataclasses
+
+from .common import BenchSettings, csv, run_method
+
+
+def run(dataset="cora", seeds=(0,), rounds=None, settings=None):
+    s = settings or BenchSettings()
+    out = {}
+    for bb in ("gcn", "gat", "gcnii"):
+        sb = dataclasses.replace(s, backbone=bb)
+        accs = []
+        for seed in seeds:
+            r = run_method("glasu", dataset, seed=seed, s=sb, q=1,
+                           rounds=rounds)
+            accs.append(r.test_acc)
+        acc = sum(accs) / len(accs)
+        out[bb] = acc
+        csv(f"fig3/{dataset}/{bb}", f"acc={acc * 100:.1f}")
+    return out

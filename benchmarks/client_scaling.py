@@ -1,0 +1,21 @@
+"""Paper Table 5: Cent / StAl / GLASU across M = 3, 5, 7 clients."""
+from .common import BenchSettings, csv, run_method
+
+
+def run(dataset="citeseer", ms=(3, 5, 7), seeds=(0,), rounds=None,
+        settings=None):
+    s = settings or BenchSettings()
+    out = {}
+    cent = run_method("cent", dataset, seed=seeds[0], s=s, rounds=rounds)
+    csv(f"table5/{dataset}/cent", f"acc={cent.test_acc * 100:.1f}")
+    for m in ms:
+        for meth in ("stal", "glasu"):
+            accs = []
+            for seed in seeds:
+                r = run_method(meth, dataset, n_clients=m, seed=seed, s=s,
+                               q=1, rounds=rounds)
+                accs.append(r.test_acc)
+            acc = sum(accs) / len(accs)
+            out[(m, meth)] = acc
+            csv(f"table5/{dataset}/M={m}/{meth}", f"acc={acc * 100:.1f}")
+    return out

@@ -1,0 +1,29 @@
+"""§3.4 communication-saving model: measured bytes vs the QL/K formula."""
+from repro.core.glasu import GlasuConfig
+from repro.graph.sampler import GlasuSampler, SamplerConfig
+from repro.graph.synth import make_vfl_dataset
+
+from .common import BenchSettings, agg_layers_for_k, csv
+
+
+def run(dataset="cora", settings=None):
+    s = settings or BenchSettings()
+    data = make_vfl_dataset(dataset, n_clients=3, seed=0)
+    base = None
+    out = {}
+    for (k, q) in [(4, 1), (2, 1), (1, 1), (2, 4), (1, 8)]:
+        agg = agg_layers_for_k(s.n_layers, k)
+        scfg = SamplerConfig(n_layers=s.n_layers, agg_layers=agg,
+                             batch_size=s.batch_size, fanout=s.fanout,
+                             size_cap=s.size_cap)
+        sampler = GlasuSampler(data, scfg, seed=0)
+        per_round = sampler.comm_bytes_per_joint_inference(s.hidden)
+        per_update = per_round / q           # Q local updates per round
+        if base is None:
+            base = per_update
+        measured = base / per_update
+        predicted = (q * s.n_layers / k) / (s.n_layers / 4)  # vs K=4,Q=1 base
+        out[(k, q)] = (per_update, measured)
+        csv(f"comm/K={k},Q={q}", f"bytes_per_update={per_update:.0f}",
+            f"saving_x={measured:.2f};predicted_QL/K_x={predicted:.2f}")
+    return out

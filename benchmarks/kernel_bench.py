@@ -1,0 +1,39 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On CPU these numbers are indicative only (interpret mode executes the kernel
+body as XLA ops); the BlockSpec structure is what lowers on TPU.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(2048, 128)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 2048, size=(512, 4)), jnp.int32)
+    mask = jnp.ones((512, 4), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    ref_fn = jax.jit(ref.graph_agg_ref)
+    us_k = _time(ops.graph_agg, h, idx, mask, w)
+    us_r = _time(ref_fn, h, idx, mask, w)
+    print(f"kernel/graph_agg,{us_k:.0f},ref_us={us_r:.0f}")
+
+    q = jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)
+    ref_fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us_k = _time(lambda q: ops.flash_attention(q, q, q), q)
+    us_r = _time(lambda q: ref_fa(q, q, q), q)
+    print(f"kernel/flash_attention,{us_k:.0f},ref_us={us_r:.0f}")

@@ -1,0 +1,28 @@
+"""Paper Table 3: accuracy / time / comm under K = 4, 2, 1 lazy aggregation."""
+from .common import BenchSettings, csv, run_method
+
+
+def run(dataset="cora", seeds=(0,), rounds=None, settings=None):
+    s = settings or BenchSettings()
+    base_time = base_comm = None
+    out = {}
+    for k in (4, 2, 1):
+        accs, times, comms = [], [], []
+        for seed in seeds:
+            r = run_method("glasu", dataset, seed=seed, s=s, k=k, q=1,
+                           rounds=rounds)
+            accs.append(r.test_acc)
+            times.append(r.wall_seconds)
+            comms.append(r.comm_bytes)
+        acc = sum(accs) / len(accs)
+        t = sum(times) / len(times)
+        c = sum(comms) / len(comms)
+        if k == 4:
+            base_time, base_comm = t, c
+        saving_t = 100 * (1 - t / base_time)
+        saving_c = 100 * (1 - c / base_comm)
+        out[k] = (acc, t, c)
+        csv(f"table3/{dataset}/K={k}", f"acc={acc * 100:.1f}",
+            f"time_s={t:.1f};comm_MB={c / 1e6:.1f};"
+            f"save_time%={saving_t:.1f};save_comm%={saving_c:.1f}")
+    return out

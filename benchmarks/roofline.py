@@ -1,0 +1,105 @@
+"""Roofline analysis (mandate g): three terms per (arch x shape) from the
+dry-run JSON records produced by launch/dryrun.py.
+
+  compute term    = per-device HLO FLOPs (trip-count-aware walker) / 197 TF/s
+  memory term     = per-device HBM bytes (fusion-boundary model) / 819 GB/s
+  collective term = per-device collective bytes / 50 GB/s ICI link
+
+MODEL_FLOPS uses 6*N_active*D for training and 2*N_active*D for inference
+tokens (D = global tokens). The ratio MODEL_FLOPS / HLO_FLOPs exposes remat
+and dispatch overheads. Terms are SINGLE-POD (16x16); the multi-pod records
+prove the pod axis lowers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9
+
+
+def model_flops(rec: dict) -> float:
+    n_act = rec["active_params"]
+    if rec["mode"] == "train":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 6.0 * n_act * tokens
+    if rec["mode"] == "prefill":
+        tokens = rec["seq_len"] * rec["global_batch"]
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * rec["global_batch"]     # decode: one token/seq
+
+
+def terms(rec: dict) -> dict:
+    comp = rec["flops"] / PEAK_FLOPS
+    memt = rec["hbm_bytes"] / HBM_BW
+    coll = rec["collective_bytes"] / ICI_BW
+    dom = max(("compute", comp), ("memory", memt), ("collective", coll),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    hlo_global = rec["flops"] * rec["n_devices"]
+    mem = rec.get("memory", {})
+    hbm_used = (mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+                - mem.get("alias_size_in_bytes", 0))
+    return {
+        "compute_s": comp, "memory_s": memt, "collective_s": coll,
+        "dominant": dom[0], "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "hbm_used_gb": hbm_used / 1e9,
+        "fits": hbm_used <= HBM_PER_CHIP,
+    }
+
+
+def advice(rec: dict, t: dict) -> str:
+    if t["dominant"] == "collective":
+        return ("skip/batch collectives (GLASU lazy aggregation, larger "
+                "microbatch per sync)")
+    if t["dominant"] == "memory":
+        if rec["mode"] == "decode":
+            return "shrink/ shard the KV cache (window, latent or ring cache)"
+        return "raise arithmetic intensity (fuse, larger per-chip batch)"
+    if t["useful_ratio"] < 0.5:
+        return "reduce remat recompute / dispatch overcompute"
+    return "compute-bound at healthy efficiency: scale chips or quantize"
+
+
+def load(results_dir: str = "results/dryrun", mesh: str = "16x16") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("ok") and r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run(results_dir: str = "results/dryrun", emit_markdown: Optional[str] = None):
+    recs = load(results_dir)
+    rows = []
+    for r in recs:
+        t = terms(r)
+        rows.append((r, t))
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"compute_us={t['compute_s'] * 1e6:.1f},"
+              f"memory_us={t['memory_s'] * 1e6:.1f};"
+              f"collective_us={t['collective_s'] * 1e6:.1f};"
+              f"dominant={t['dominant']};useful={t['useful_ratio']:.2f};"
+              f"hbm_gb={t['hbm_used_gb']:.1f}")
+    if emit_markdown:
+        with open(emit_markdown, "w") as fh:
+            fh.write("| arch | shape | compute (ms) | memory (ms) | "
+                     "collective (ms) | dominant | MODEL/HLO | HBM GB/chip | "
+                     "fits 16G | next lever |\n|---|---|---|---|---|---|---|---|---|---|\n")
+            for r, t in rows:
+                fh.write(
+                    f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.2f} "
+                    f"| {t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} "
+                    f"| **{t['dominant']}** | {t['useful_ratio']:.2f} "
+                    f"| {t['hbm_used_gb']:.1f} | "
+                    f"{'y' if t['fits'] else 'NO'} | {advice(r, t)} |\n")
+    return rows

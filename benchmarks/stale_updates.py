@@ -1,0 +1,23 @@
+"""Paper Table 4: time / communication to reach a target accuracy vs Q."""
+from .common import BenchSettings, csv, run_method
+
+
+def run(dataset="cora", target=0.80, qs=(2, 4, 8, 16), seeds=(0,),
+        rounds=None, settings=None):
+    s = settings or BenchSettings()
+    out = {}
+    for q in qs:
+        accs, times, comms, rounds_used = [], [], [], []
+        for seed in seeds:
+            r = run_method("glasu", dataset, seed=seed, s=s, q=q,
+                           target_acc=target, rounds=rounds)
+            accs.append(r.test_acc)
+            times.append(r.wall_seconds)
+            comms.append(r.comm_bytes)
+            rounds_used.append(r.rounds_run)
+        acc = sum(accs) / len(accs)
+        out[q] = (acc, sum(times) / len(times), sum(comms) / len(comms))
+        csv(f"table4/{dataset}/Q={q}", f"acc={acc * 100:.1f}",
+            f"time_s={out[q][1]:.1f};comm_MB={out[q][2] / 1e6:.2f};"
+            f"rounds={sum(rounds_used) / len(rounds_used):.0f}")
+    return out

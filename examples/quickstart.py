@@ -1,0 +1,35 @@
+"""Quickstart: train a GLASU split-GCNII on the Cora proxy in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.glasu import GlasuConfig
+from repro.core.train import TrainConfig, train_glasu
+from repro.graph.sampler import SamplerConfig
+from repro.graph.synth import make_vfl_dataset
+
+
+def main():
+    data = make_vfl_dataset("cora", n_clients=3, seed=0)
+    d_in = max(c.feat_dim for c in data.clients)
+
+    model_cfg = GlasuConfig(
+        n_clients=3, n_layers=4, hidden=64, n_classes=data.n_classes,
+        d_in=d_in, backbone="gcnii",
+        agg_layers=(1, 3),       # lazy aggregation: K=2 of L=4 layers
+        n_local_steps=4,         # stale updates: Q=4
+    )
+    sampler_cfg = SamplerConfig(n_layers=4, agg_layers=(1, 3), batch_size=16,
+                                fanout=3)
+    res = train_glasu(data, model_cfg, sampler_cfg,
+                      TrainConfig(rounds=60, lr=0.01, eval_every=20))
+    print(f"\nGLASU (K=2, Q=4) on cora-proxy:")
+    print(f"  test accuracy   : {res.test_acc * 100:.1f}%")
+    print(f"  communication   : {res.comm_bytes / 1e6:.1f} MB "
+          f"({res.rounds_run} rounds)")
+    print(f"  wall time       : {res.wall_seconds:.1f}s")
+    print("  history         :",
+          [f"r{h['round']}:{h['test_acc']:.2f}" for h in res.history])
+
+
+if __name__ == "__main__":
+    main()

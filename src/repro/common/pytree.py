@@ -1,0 +1,57 @@
+"""Small pytree utilities used across the framework (no flax/optax in env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return jax.tree.map(lambda a, b: alpha * a + b, x, y)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_dot(tree, tree))
+
+
+def tree_count_params(tree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )
+
+
+def tree_any_nan(tree):
+    leaves = [jnp.any(jnp.isnan(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(leaves))

@@ -1,0 +1,171 @@
+"""Architecture config schema + input-shape suite + registry.
+
+Every assigned architecture gets one module in this package defining an
+``ArchConfig`` with the exact published hyperparameters (source cited in the
+module docstring) plus a ``reduced()`` variant for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class GlasuSplit:
+    """The paper's technique applied to a transformer backbone (§DESIGN.md 4).
+
+    The hidden dimension is vertically partitioned into ``n_clients`` feature
+    shards (mapped onto the 'model' mesh axis). Cross-shard mixing (concat
+    aggregation + re-projection) happens ONLY at ``sync_layers``; all other
+    layers are block-diagonal (client-local, collective-free). ``local_steps``
+    = Q stale-update steps per sampled batch.
+    """
+    n_clients: int = 4
+    sync_every: int = 2            # aggregate every k-th layer (K = L/sync_every)
+    local_steps: int = 1           # Q
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    kind: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # --- MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    n_dense_layers: int = 0        # leading dense layers (DeepSeek: 1)
+    router_aux_weight: float = 0.01
+    capacity_factor: float = 1.25
+    # --- attention variant
+    attn: str = "gqa"              # gqa | mla | none
+    kv_lora: int = 0
+    d_nope: int = 0
+    d_rope: int = 0
+    sliding_window: Optional[int] = None
+    rope_theta: float = 10000.0
+    # --- ssm / hybrid
+    block: str = "attn"            # attn | mamba2 | rwkv6
+    d_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    attn_every: int = 0            # zamba2: shared attn block every N ssm layers
+    ssm_chunk: int = 256
+    # --- encoder-decoder
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- modality frontend STUB (audio/vlm): input_specs provides embeddings
+    frontend: Optional[str] = None
+    frontend_tokens: int = 0
+    # --- training
+    dtype: str = "bfloat16"
+    optimizer: str = "adamw"       # adamw | adafactor | sgd
+    lr: float = 3e-4
+    remat: bool = True
+    grad_accum: int = 1            # microbatches per step (activation memory lever)
+    # --- paper technique
+    glasu: Optional[GlasuSplit] = None
+    # --- kernels
+    use_flash: bool = False
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.kind in ("encdec", "audio") and self.enc_layers > 0
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (for MODEL_FLOPS)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        if self.block == "mamba2":
+            d_inner = self.ssm_heads * self.ssm_head_dim
+            per = d * (2 * d_inner + 2 * self.d_state + self.ssm_heads) + d_inner * d
+            n_ssm = self.n_layers
+            attn_blocks = (self.n_layers // self.attn_every) if self.attn_every else 0
+            per_attn = (d * (self.n_heads + 2 * self.n_kv) * self.d_head
+                        + self.n_heads * self.d_head * d + 3 * d * f)
+            return per * n_ssm + (per_attn if attn_blocks else 0) + 2 * v * d
+        if self.block == "rwkv6":
+            d_inner = self.ssm_heads * self.ssm_head_dim
+            per = 4 * d * d_inner + d_inner * d + 2 * d * f
+            return per * self.n_layers + 2 * v * d
+        if self.attn == "mla":
+            attn = (d * self.n_heads * (self.d_nope + self.d_rope)
+                    + d * (self.kv_lora + self.d_rope)
+                    + self.kv_lora * self.n_heads * (self.d_nope + self.d_head)
+                    + self.n_heads * self.d_head * d)
+        else:
+            attn = (d * (self.n_heads + 2 * self.n_kv) * self.d_head
+                    + self.n_heads * self.d_head * d)
+        mlp_dense = 3 * d * f
+        if self.moe:
+            mlp_moe = 3 * d * self.d_ff_expert * self.n_experts \
+                + 3 * d * self.d_ff_expert * self.n_shared_experts
+            n_moe = self.n_layers - self.n_dense_layers
+            mlp_total = mlp_moe * n_moe + mlp_dense * self.n_dense_layers
+        else:
+            n = self.enc_layers + self.dec_layers if self.is_encdec else self.n_layers
+            mlp_total = mlp_dense * n
+        n = self.enc_layers + self.dec_layers if self.is_encdec else self.n_layers
+        total = attn * n + mlp_total + 2 * v * d
+        if self.is_encdec:
+            total += attn * self.dec_layers  # cross attention
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        mlp_active = 3 * d * self.d_ff_expert * (self.top_k + self.n_shared_experts)
+        mlp_all = 3 * d * self.d_ff_expert * (self.n_experts + self.n_shared_experts)
+        n_moe = self.n_layers - self.n_dense_layers
+        return self.param_count() - (mlp_all - mlp_active) * n_moe
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                      # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "seamless_m4t_large_v2", "pixtral_12b", "smollm_360m",
+    "deepseek_v2_lite_16b", "phi35_moe_42b", "zamba2_1p2b",
+    "rwkv6_7b", "llama3_405b", "yi_34b", "granite_20b",
+]
+
+# Paper's own GNN configs live beside the transformer zoo.
+GNN_ARCH_IDS = ["glasu_gcnii", "glasu_gcn", "glasu_gat"]
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def get_reduced(arch_id: str) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.reduced()

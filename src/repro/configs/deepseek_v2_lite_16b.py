@@ -1,0 +1,28 @@
+"""DeepSeek-V2-Lite (16B, 2.4B active) [arXiv:2405.04434] — MLA + MoE.
+
+27L, d_model=2048, 16 heads MLA (kv_lora=512, d_nope=128, d_rope=64, d_v=128),
+MoE: 64 routed experts top-6 + 2 shared, expert d_ff=1408; layer 0 dense
+(d_ff=10944); vocab=102400. (The assignment header says "MoE 64e top-6";
+its bracket note "160 routed" refers to full V2 — we follow the primary
+64-expert Lite spec and record the discrepancy here.)
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-lite-16b", kind="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv=16, d_head=128,
+    d_ff=10944, vocab=102400,
+    moe=True, n_experts=64, top_k=6, n_shared_experts=2, d_ff_expert=1408,
+    n_dense_layers=1,
+    attn="mla", kv_lora=512, d_nope=128, d_rope=64,
+    grad_accum=2,
+    dtype="bfloat16", optimizer="adamw", lr=2e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, n_dense_layers=1, d_model=256, n_heads=4,
+                        n_kv=4, d_head=64, d_ff=512, vocab=512,
+                        n_experts=4, top_k=2, n_shared_experts=1,
+                        d_ff_expert=128, kv_lora=64, d_nope=32, d_rope=16,
+                        dtype="float32", remat=False, grad_accum=1)

@@ -1,0 +1,21 @@
+"""Granite-20B-Code [arXiv:2405.04324] — dense MQA (kv=1) code LM.
+
+52L, d_model=6144, 48 heads (MQA kv=1, head_dim=128), d_ff=24576,
+vocab=49152. kv=1 makes the KV-cache collective degenerate (fully
+replicated keys) — noted in the roofline discussion.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b", kind="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv=1, d_head=128,
+    d_ff=24576, vocab=49152,
+    grad_accum=4,
+    dtype="bfloat16", optimizer="adafactor", lr=1e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=1, d_head=64,
+                        d_ff=512, vocab=512, dtype="float32",
+                        optimizer="adamw", remat=False, grad_accum=1)

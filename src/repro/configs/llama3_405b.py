@@ -1,0 +1,21 @@
+"""Llama-3.1-405B [arXiv:2407.21783] — frontier dense GQA LM.
+
+126L, d_model=16384, 128 heads (GQA kv=8, head_dim=128), d_ff=53248,
+vocab=128256, rope theta 500k. Optimizer = adafactor so optimizer state fits
+the v5e HBM budget at 256/512 chips (see DESIGN.md hardware adaptation).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b", kind="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv=8, d_head=128,
+    d_ff=53248, vocab=128256,
+    grad_accum=4,
+    rope_theta=500000.0, dtype="bfloat16", optimizer="adafactor", lr=8e-5,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=512, n_heads=8, n_kv=2, d_head=64,
+                        d_ff=1024, vocab=512, dtype="float32",
+                        optimizer="adamw", remat=False, grad_accum=1)

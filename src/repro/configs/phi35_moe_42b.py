@@ -1,0 +1,21 @@
+"""Phi-3.5-MoE (42B, 6.6B active) [hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model=4096, 32 heads (GQA kv=8, head_dim=128), 16 experts top-2,
+expert d_ff=6400, vocab=32064.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b", kind="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, d_head=128,
+    d_ff=6400, vocab=32064,
+    moe=True, n_experts=16, top_k=2, n_shared_experts=0, d_ff_expert=6400,
+    grad_accum=4,
+    dtype="bfloat16", optimizer="adamw", lr=2e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=2, d_head=64,
+                        d_ff=512, vocab=512, n_experts=4, top_k=2,
+                        d_ff_expert=128, dtype="float32", remat=False, grad_accum=1)

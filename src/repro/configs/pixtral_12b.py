@@ -1,0 +1,22 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409] — [vlm] decoder backbone.
+
+Pixtral-ViT vision tower is a STUB (input_specs provides patch embeddings);
+the language backbone is Mistral-Nemo-style: 40L, d_model=5120, 32 heads
+(GQA kv=8, head_dim=128), d_ff=14336, vocab=131072.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", kind="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv=8, d_head=128,
+    d_ff=14336, vocab=131072,
+    frontend="vision", frontend_tokens=1024,
+    grad_accum=4,
+    rope_theta=1e6, dtype="bfloat16", optimizer="adamw", lr=2e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=2, d_head=64,
+                        d_ff=512, vocab=512, frontend_tokens=16,
+                        dtype="float32", remat=False, grad_accum=1)

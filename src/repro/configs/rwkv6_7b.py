@@ -1,0 +1,23 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+32L, d_model=4096 (64 heads x 64), channel-mix d_ff=14336, vocab=65536.
+GLASU §Arch-applicability: no attention exists, so lazy aggregation of
+attention layers is inapplicable; the vertical feature split applies to the
+time-mix/channel-mix widths instead (see DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-7b", kind="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv=0, d_head=0,
+    d_ff=14336, vocab=65536,
+    attn="none", block="rwkv6", ssm_heads=64, ssm_head_dim=64,
+    grad_accum=2,
+    dtype="bfloat16", optimizer="adamw", lr=3e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, d_ff=512, vocab=512,
+                        ssm_heads=4, ssm_head_dim=64,
+                        dtype="float32", remat=False, grad_accum=1)

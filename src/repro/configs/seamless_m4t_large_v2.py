@@ -1,0 +1,22 @@
+"""SeamlessM4T-Large v2 [arXiv:2308.11596] — [audio] encoder-decoder backbone.
+
+24L/24L enc-dec, d_model=1024, 16 heads (MHA, kv=16), d_ff=8192,
+vocab=256206. The mel-spectrogram + conformer feature frontend is a STUB per
+mandate: input_specs provides precomputed frame embeddings (B, T, d_model).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2", kind="audio",
+    n_layers=24, enc_layers=24, dec_layers=24,
+    d_model=1024, n_heads=16, n_kv=16, d_head=64,
+    d_ff=8192, vocab=256206,
+    frontend="audio", frontend_tokens=0,   # source length = input seq_len
+    dtype="bfloat16", optimizer="adamw", lr=1e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, enc_layers=2, dec_layers=2, d_model=256,
+                        n_heads=4, n_kv=4, d_ff=512, vocab=512,
+                        dtype="float32", remat=False)

@@ -1,0 +1,17 @@
+"""SmolLM-360M [hf:HuggingFaceTB/SmolLM-360M] — small llama-arch dense LM.
+
+32L, d_model=960, 15 heads (GQA kv=5, head_dim=64), d_ff=2560, vocab=49152.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="smollm-360m", kind="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv=5, d_head=64,
+    d_ff=2560, vocab=49152,
+    dtype="bfloat16", optimizer="adamw", lr=3e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=240, n_heads=3, n_kv=1, d_head=80,
+                        d_ff=512, vocab=512, dtype="float32", remat=False)

@@ -1,0 +1,20 @@
+"""Yi-34B [arXiv:2403.04652] — llama-arch dense GQA LM.
+
+60L, d_model=7168, 56 heads (GQA kv=8, head_dim=128), d_ff=20480,
+vocab=64000.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b", kind="dense",
+    n_layers=60, d_model=7168, n_heads=56, n_kv=8, d_head=128,
+    d_ff=20480, vocab=64000,
+    grad_accum=4,
+    rope_theta=5e6, dtype="bfloat16", optimizer="adafactor", lr=1e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=448, n_heads=7, n_kv=1, d_head=64,
+                        d_ff=1024, vocab=512, dtype="float32",
+                        optimizer="adamw", remat=False, grad_accum=1)

@@ -1,0 +1,22 @@
+"""Zamba2-1.2B [arXiv:2411.15242] — hybrid Mamba2 + shared attention blocks.
+
+38 Mamba2 layers (d_model=2048, d_state=64, 64 SSM heads x 64 head dim,
+expand=2) with a weight-SHARED attention+MLP block applied every 6 layers
+(32 heads MHA kv=32, d_ff=8192); vocab=32000.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", kind="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv=32, d_head=64,
+    d_ff=8192, vocab=32000,
+    block="mamba2", d_state=64, ssm_heads=64, ssm_head_dim=64, attn_every=6,
+    dtype="bfloat16", optimizer="adamw", lr=3e-4,
+)
+
+
+def reduced() -> ArchConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=4, d_head=64,
+                        d_ff=512, vocab=512, ssm_heads=8, ssm_head_dim=32,
+                        d_state=16, attn_every=2, ssm_chunk=32,
+                        dtype="float32", remat=False)

@@ -1,0 +1,78 @@
+"""Checkpointing: save/restore arbitrary pytrees (params + optimizer state).
+
+npz-based (the container has no orbax); leaves are stored flat with
+path-derived keys so restore round-trips exact tree structure and dtypes
+(bf16 saved via uint16 view). Step-numbered files + a LATEST pointer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[dict, str]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = {}
+    metas = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == np.dtype("bfloat16"):
+            arrays[f"leaf_{i}"] = arr.view(np.uint16)
+            metas.append("bfloat16")
+        else:
+            arrays[f"leaf_{i}"] = arr
+            metas.append(str(arr.dtype))
+    return arrays, json.dumps({"n": len(leaves), "dtypes": metas,
+                               "treedef": str(treedef)})
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = Path(ckpt_dir)
+    path.mkdir(parents=True, exist_ok=True)
+    arrays, meta = _flatten(tree)
+    fn = path / f"ckpt_{step:08d}.npz"
+    np.savez(fn, __meta__=np.frombuffer(meta.encode(), dtype=np.uint8),
+             **arrays)
+    (path / "LATEST").write_text(str(step))
+    return str(fn)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    return int(p.read_text().strip())
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure/dtypes of ``like`` (an example pytree)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    fn = Path(ckpt_dir) / f"ckpt_{step:08d}.npz"
+    data = np.load(fn)
+    meta = json.loads(bytes(data["__meta__"]).decode())
+    import jax.numpy as jnp
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    assert meta["n"] == len(leaves), \
+        f"checkpoint has {meta['n']} leaves, tree has {len(leaves)}"
+    restored = []
+    for i, dt in enumerate(meta["dtypes"]):
+        arr = data[f"leaf_{i}"]
+        if dt == "bfloat16":
+            restored.append(jnp.asarray(arr).view(jnp.bfloat16))
+        else:
+            restored.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def cleanup(ckpt_dir: str, keep: int = 3):
+    files = sorted(Path(ckpt_dir).glob("ckpt_*.npz"))
+    for f in files[:-keep]:
+        f.unlink()

@@ -1,0 +1,332 @@
+"""GLASU: split-model VFL-GNN with lazy aggregation and stale updates.
+
+Implements the paper's Algorithms 1 (training round), 3 (JointInference with
+Extract) and 4 (LocalUpdate with stale cross-client representations), plus the
+three baselines of §5.2 as special cases (§3.5):
+
+  * centralized            -> M = 1
+  * standalone [8]-style   -> agg_layers = () (clients never communicate)
+  * simulated centralized [9] -> agg_layers = all layers, Q = 1
+  * FedBCD [2]             -> A(E_m) = I (no graph; covered by unit test)
+
+Execution model: the M clients are a stacked leading axis on every parameter
+and activation leaf, and client-local compute is ``jax.vmap`` over that axis.
+Server aggregation (parameter-free mean/concat, §3.1) is a cross-client
+reduction — the only place information crosses the axis, exactly where the
+paper places communication. ``CommMeter`` charges bytes for those crossings
+using the paper's cost model.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..graph.sampler import SampledBatch
+from ..models.gnn import BACKBONES
+from ..optim import optimizers as opt_lib
+
+
+@dataclass(frozen=True)
+class GlasuConfig:
+    n_clients: int = 3
+    n_layers: int = 4
+    hidden: int = 64
+    n_classes: int = 7
+    d_in: int = 478                       # padded per-client feature width
+    backbone: str = "gcnii"
+    agg: str = "mean"                     # 'mean' | 'concat' (parameter-free, §3.1)
+    agg_layers: Sequence[int] = (1, 3)    # lazy aggregation index set I
+    n_local_steps: int = 1                # Q (stale updates)
+    gcnii_alpha: float = 0.1
+    gcnii_beta: float = 0.5
+    gat_heads: int = 2
+    dp_sigma: float = 0.0                 # §3.6 DP hook (noise on uploads)
+    secure_agg: bool = False              # §3.6 SA hook (cancelling masks)
+    labels_at_client: Optional[int] = None  # Appendix B.2 (Alg 5-7): one label owner
+    use_pallas: bool = False              # graph_agg Pallas kernel for gather-mean
+
+    def __post_init__(self):
+        if self.agg_layers:
+            assert (self.n_layers - 1) in self.agg_layers, \
+                "prediction layer input must be aggregated (paper §3.1)"
+        if self.agg == "concat":
+            assert self.backbone == "gcn", "concat aggregation implemented for GCN"
+
+    def layer_in_dim(self, l: int) -> int:
+        """Input width of layer l (concat widens post-aggregation layers)."""
+        if l == 0:
+            return self.hidden
+        widened = self.agg == "concat" and (l - 1) in self.agg_layers
+        return self.hidden * (self.n_clients if widened else 1)
+
+
+def init_params(key, cfg: GlasuConfig):
+    """Per-client stacked parameters: every leaf has leading dim M."""
+    init_layer, _ = BACKBONES[cfg.backbone]
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def stack(fn, k):
+        return jax.vmap(fn)(jax.random.split(k, cfg.n_clients))
+
+    scale_in = jnp.sqrt(2.0 / cfg.d_in)
+    params = {
+        "inp": stack(lambda k: {"W": jax.random.normal(k, (cfg.d_in, cfg.hidden)) * scale_in,
+                                "b": jnp.zeros((cfg.hidden,))}, keys[0]),
+        "layers": [],
+        "cls": None,
+    }
+    for l in range(cfg.n_layers):
+        d_in = cfg.layer_in_dim(l)
+        kw = {"n_heads": cfg.gat_heads} if cfg.backbone == "gat" else {}
+        params["layers"].append(
+            stack(lambda k, d=d_in, kw=kw: init_layer(k, d, cfg.hidden, **kw), keys[l + 1]))
+    d_cls = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
+    scale_c = jnp.sqrt(1.0 / d_cls)
+    params["cls"] = stack(lambda k: {"W": jax.random.normal(k, (d_cls, cfg.n_classes)) * scale_c,
+                                     "b": jnp.zeros((cfg.n_classes,))}, keys[-1])
+    return params
+
+
+# --------------------------------------------------------------------- layers
+def _pallas_gcn_layer(p, h, h0, idx, mask):
+    """GCN client sub-layer on the fused Pallas graph_agg kernel
+    (gather + masked mean + MXU matmul in one pallas_call)."""
+    from ..kernels import ops as kops
+    out = kops.graph_agg(h, idx, mask, p["W"])
+    return jax.nn.relu(out + p["b"])
+
+
+def _client_layer(cfg: GlasuConfig, l: int):
+    _, layer_fn = BACKBONES[cfg.backbone]
+    if cfg.backbone == "gcnii":
+        beta = cfg.gcnii_beta / (l + 1)   # beta_l = lambda / l decay as in [7]
+        return functools.partial(layer_fn, alpha=cfg.gcnii_alpha, beta=beta)
+    if cfg.backbone == "gcn" and cfg.use_pallas:
+        return _pallas_gcn_layer
+    return layer_fn
+
+
+def _aggregate(cfg: GlasuConfig, h_plus, key=None):
+    """Server Agg (paper §3.1): parameter-free mean/concat across clients.
+
+    h_plus: (M, n, h). Returns (agg, stale) where
+      stale[m] = Extract(H[l+1], H_m^+[l])  — the "all-but-m" buffer (§3.3).
+    Optional §3.6 hooks: pairwise-cancelling secure-agg masks and DP noise are
+    applied to the *uploads*; the mean is unchanged by SA masks by design.
+    """
+    m = h_plus.shape[0]
+    uploads = h_plus
+    if cfg.secure_agg and key is not None:
+        masks = jax.random.normal(key, h_plus.shape, h_plus.dtype)
+        masks = masks - jnp.mean(masks, axis=0, keepdims=True)  # sum_m mask_m = 0
+        uploads = uploads + masks
+    if cfg.dp_sigma > 0.0 and key is not None:
+        nkey = jax.random.fold_in(key, 1)
+        uploads = uploads + cfg.dp_sigma * jax.random.normal(nkey, h_plus.shape, h_plus.dtype)
+    if cfg.agg == "mean":
+        agg = jnp.mean(uploads, axis=0)                      # (n, h)
+        stale = agg[None] - uploads / m                      # Extract: H - H_m^+/M
+        return jnp.broadcast_to(agg[None], h_plus.shape), stale
+    # concat: (n, M*h); stale keeps other clients' blocks (own block zeroed)
+    n, h = h_plus.shape[1], h_plus.shape[2]
+    agg = jnp.transpose(uploads, (1, 0, 2)).reshape(n, m * h)
+    own_block = jnp.eye(m, dtype=h_plus.dtype)               # (M, M)
+    blockmask = jnp.repeat(1.0 - own_block, h, axis=1)       # (M, M*h)
+    stale = agg[None] * blockmask[:, None, :]
+    return jnp.broadcast_to(agg[None], (m, n, m * h)), stale
+
+
+def _combine_with_stale(cfg: GlasuConfig, stale_l, h_plus_m, m_index=None):
+    """Client-side Agg(H_{-m} (stale), H_m^{+} (fresh)) — Alg 4 line 6."""
+    if cfg.agg == "mean":
+        return stale_l + h_plus_m / cfg.n_clients
+    n, h = h_plus_m.shape
+    own = jnp.zeros((n, cfg.n_clients, h), h_plus_m.dtype)
+    own = own.at[:, m_index, :].set(h_plus_m)
+    return stale_l + own.reshape(n, cfg.n_clients * h)
+
+
+# ------------------------------------------------------------------- forward
+def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_index,
+                  stale: Optional[Dict[int, Any]] = None,
+                  return_hidden: bool = False):
+    """One client's pass through all layers, aggregating via stale buffers.
+
+    Used by LocalUpdate (Alg 4): server aggregation is replaced by the stored
+    H_{-m} plus the client's fresh representation.
+    """
+    h = feats_m @ params_m["inp"]["W"] + params_m["inp"]["b"]
+    h0 = h
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+        idx, mask = batch.gather_idx[l][m_index], batch.gather_mask[l][m_index]
+        h_plus = layer(params_m["layers"][l], h, h0, idx, mask)
+        h0 = h0[batch.self_pos[l][m_index]]
+        if l in cfg.agg_layers:
+            h = _combine_with_stale(cfg, stale[l], h_plus, m_index)
+        else:
+            h = h_plus
+    if return_hidden:
+        return h
+    logits = h @ params_m["cls"]["W"] + params_m["cls"]["b"]
+    return logits
+
+
+def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None):
+    """Alg 3: full split-model forward with server aggregation at l in I.
+
+    Returns (logits (M, S, C), stale {l: (M, n_{l+1}, h_agg)}).
+    """
+    feats = batch.feats
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
+    h0 = h
+    stale: Dict[int, Any] = {}
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l in cfg.agg_layers:
+            subkey = jax.random.fold_in(key, l) if key is not None else None
+            h, stale[l] = _aggregate(cfg, h_plus, subkey)
+        else:
+            h = h_plus
+    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    return logits, stale
+
+
+def client_loss(params_m, feats_m, batch: SampledBatch, stale_m, labels,
+                cfg: GlasuConfig, m_index):
+    """Client m's local objective (Alg 4 line 11) with stale buffers fixed."""
+    logits = _client_trunk(cfg, params_m, feats_m, batch, m_index, stale_m)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def label_owner_grad(params, batch: SampledBatch, stale, cfg: GlasuConfig):
+    """Alg 6 (modified JointInference): the label owner computes
+    grad_{H[L]} of ITS loss; the server broadcasts it to all clients."""
+    m0 = cfg.labels_at_client
+
+    def owner_loss(h):
+        pm = jax.tree.map(lambda v: v[m0], params)
+        logits = h @ pm["cls"]["W"] + pm["cls"]["b"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch.labels[:, None], axis=1)[:, 0]
+        return jnp.mean(nll)
+
+    pm = jax.tree.map(lambda v: v[m0], params)
+    sm = {l: v[m0] for l, v in stale.items()}
+    h_l = _client_trunk(cfg, pm, batch.feats[m0], batch, m0, sm,
+                        return_hidden=True)
+    return jax.grad(owner_loss)(h_l)
+
+
+def local_update_steps(params, opt_state, batch: SampledBatch, stale,
+                       cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                       g_hl=None):
+    """Q iterations of Alg 4 under ``lax.scan`` (same mini-batch, stale H_{-m}).
+
+    With ``labels_at_client`` set (Appendix B.2, Alg 7): only the owner
+    evaluates the real loss; every other client trains on the surrogate
+    <g_HL, H_m[L]> whose gradient equals the chain-rule product in eq. (3).
+    """
+    labels = batch.labels
+    m_ids = jnp.arange(cfg.n_clients)
+
+    def one_step(carry, _):
+        p, s = carry
+
+        def per_client(params_m, feats_m, stale_m, m_index):
+            if cfg.labels_at_client is None:
+                return client_loss(params_m, feats_m, batch, stale_m, labels,
+                                   cfg, m_index)
+            own = client_loss(params_m, feats_m, batch, stale_m, labels,
+                              cfg, m_index)
+            h_l = _client_trunk(cfg, params_m, feats_m, batch, m_index,
+                                stale_m, return_hidden=True)
+            surrogate = jnp.sum(jax.lax.stop_gradient(g_hl) * h_l)
+            is_owner = m_index == cfg.labels_at_client
+            # owner optimizes its real loss (incl. classifier); others the
+            # broadcast-gradient surrogate (they own no classifier grads)
+            return jnp.where(is_owner, own, surrogate)
+
+        loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                               in_axes=(0, 0, 0, 0))(p, batch.feats, stale, m_ids)
+        updates, s = optimizer.update(grads, s, p)
+        p = opt_lib.apply_updates(p, updates)
+        return (p, s), jnp.mean(loss)
+
+    (params, opt_state), losses = jax.lax.scan(
+        one_step, (params, opt_state), None, length=cfg.n_local_steps)
+    return params, opt_state, losses
+
+
+def make_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer):
+    """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates. jitted."""
+
+    @jax.jit
+    def round_fn(params, opt_state, batch: SampledBatch, key):
+        if cfg.agg_layers:
+            _, stale = joint_inference(params, batch, cfg, key)
+        else:
+            # standalone: no communication; zero stale buffers never used
+            stale = {}
+        g_hl = None
+        if cfg.labels_at_client is not None:
+            g_hl = label_owner_grad(params, batch, stale, cfg)
+        params, opt_state, losses = local_update_steps(
+            params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
+        return params, opt_state, losses
+
+    return round_fn
+
+
+# ---------------------------------------------------------------- evaluation
+def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
+                 chunk: int = 4096):
+    """Exact full-graph inference, chunked over nodes (eval only).
+
+    feats: (M, N, d); nbr_idx/mask: (M, N, D+1) padded neighbor tables.
+    Aggregation across clients happens at the configured layers only — the
+    eval-time model is exactly the trained split model.
+    """
+    n = feats.shape[1]
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
+    h0 = h
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+
+        def chunk_fn(lo, h_full=h, h0_full=h0, l=l, layer=layer):
+            idx = jax.lax.dynamic_slice_in_dim(nbr_idx, lo, chunk, axis=1)
+            mask = jax.lax.dynamic_slice_in_dim(nbr_mask, lo, chunk, axis=1)
+            return jax.vmap(layer)(params["layers"][l], h_full, h0_full, idx, mask)
+
+        starts = list(range(0, n, chunk))
+        pieces = [chunk_fn(lo) for lo in starts]
+        h_plus = jnp.concatenate(pieces, axis=1)[:, :n]
+        if l in cfg.agg_layers:
+            h, _ = _aggregate(cfg, h_plus)
+        else:
+            h = h_plus
+        # h0 is node-aligned in full-graph mode (no subsetting)
+    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    return logits  # (M, N, C)
+
+
+def accuracy_from_logits(logits, labels, idx, mode: str = "ensemble"):
+    """'ensemble': average client logits (GLASU eval); 'per_client': mean of
+    each client's own accuracy (standalone eval, paper §5.2)."""
+    labels = jnp.asarray(labels)
+    idx = jnp.asarray(idx)
+    if mode == "ensemble":
+        pred = jnp.argmax(jnp.mean(logits, axis=0)[idx], axis=-1)
+        return jnp.mean((pred == labels[idx]).astype(jnp.float32))
+    preds = jnp.argmax(logits[:, idx], axis=-1)
+    accs = jnp.mean((preds == labels[idx][None]).astype(jnp.float32), axis=1)
+    return jnp.mean(accs)

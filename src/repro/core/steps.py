@@ -1,0 +1,214 @@
+"""Train / serve step builders for the architecture zoo.
+
+``make_train_step(cfg)`` -> (init_state, train_step) where train_step is a
+pure function (state, batch) -> (state, metrics): CE loss (+ MoE aux), global
+grad clip, optimizer from the config. GLASU-split configs run Q microsteps
+per call: microstep 0 performs the sync-layer collectives and caches the
+gathered activations; microsteps 1..Q-1 are collective-free stale updates
+(paper Alg 1/4 transplanted to the transformer).
+
+``make_serve_step(cfg, shape)`` -> (init_serve_state, serve_step): one-token
+greedy decode against the per-layer caches (ring buffer under a sliding
+window).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import transformer as tfm
+from ..optim import optimizers as opt_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_optimizer(cfg: ArchConfig) -> opt_lib.Optimizer:
+    if cfg.optimizer == "adafactor":
+        return opt_lib.adafactor(cfg.lr)
+    if cfg.optimizer == "sgd":
+        return opt_lib.sgd(cfg.lr, momentum=0.9)
+    return opt_lib.adamw(cfg.lr)
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Stable CE in f32, shard-friendly over a vocab-partitioned last axis.
+
+    The gold logit is picked with an iota comparison instead of
+    take_along_axis — a cross-shard gather on the 'model'-sharded vocab axis
+    would force an all-gather of the full f32 logits (measured: +22 GB temp
+    on smollm train_4k).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vid == labels[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def chunked_ce_head(unemb, hidden, labels, vocab: int, chunk: int = 512):
+    """CE through the unembedding, scanned over sequence chunks.
+
+    Keeps the live f32 logits block at (B, chunk, V) instead of (B, S, V) —
+    the unchunked head dominated llama3-405b train_4k temp memory (f32
+    (B*S, D) cotangents + (B, S, V) logits).
+    """
+    from ..models.layers import wcol
+    unemb = wcol(unemb)
+    b, s, d = hidden.shape
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // chunk
+    hs = jnp.moveaxis(hidden.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h, lab = inp
+        logits = (h @ unemb).astype(jnp.float32)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(jnp.where(vid == lab[..., None], logits, 0.0), axis=-1)
+        valid = (lab >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum((lse - gold) * valid),
+                carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _loss_fn(params, batch, cfg: ArchConfig):
+    kwargs = {}
+    if cfg.is_encdec:
+        kwargs["src_embeds"] = batch["src_embeds"]
+        kwargs["tokens"] = batch["tokens"]
+    elif cfg.frontend == "vision":
+        kwargs["embeds"] = batch["patch_embeds"]
+        kwargs["tokens"] = batch["tokens"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+    hidden, aux = tfm.lm_forward(params, cfg, return_hidden=True, **kwargs)
+    loss = chunked_ce_head(params["unemb"], hidden, batch["labels"], cfg.vocab)
+    return loss + cfg.router_aux_weight * aux, (loss, aux)
+
+
+def make_train_step(cfg: ArchConfig):
+    optimizer = make_optimizer(cfg)
+
+    def init_state(key) -> TrainState:
+        params = tfm.init_lm(key, cfg)
+        return TrainState(params, optimizer.init(params),
+                          jnp.zeros([], jnp.int32))
+
+    if cfg.glasu is not None and cfg.glasu.local_steps > 1:
+        return init_state, _make_glasu_q_step(cfg, optimizer)
+
+    def grads_of(params, batch):
+        (_, (loss, aux)), grads = jax.value_and_grad(
+            _loss_fn, has_aux=True)(params, batch, cfg)
+        return grads, loss, aux
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if cfg.grad_accum > 1:
+            a = cfg.grad_accum
+            micro = {k: v.reshape(a, v.shape[0] // a, *v.shape[1:])
+                     for k, v in batch.items()}
+
+            def acc(carry, mb):
+                g_acc, l_acc, x_acc = carry
+                g, l, x = grads_of(state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, x_acc + x), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros(()), jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: (g / a).astype(g.dtype), grads)
+            loss, aux = loss / a, aux / a
+        else:
+            grads, loss, aux = grads_of(state.params, batch)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = opt_lib.apply_updates(state.params, updates)
+        return (TrainState(params, opt_state, state.step + 1),
+                {"loss": loss, "aux": aux, "grad_norm": gnorm})
+
+    return init_state, train_step
+
+
+def _make_glasu_q_step(cfg: ArchConfig, optimizer):
+    """Alg 1 for the vertical-split transformer: one joint (collective)
+    microstep caches sync-layer activations; Q-1 stale local microsteps run
+    collective-free on the SAME batch."""
+    q_steps = cfg.glasu.local_steps
+
+    def joint_and_stale_loss(params, batch):
+        x = params["emb"][batch["tokens"]]
+        logits_x, aux, stale = tfm._glasu_trunk(params, x, cfg,
+                                                cfg.sliding_window,
+                                                collect_stale=True)
+        from ..models.layers import rmsnorm
+        h = rmsnorm(params["final_norm"], logits_x)
+        logits = h @ params["unemb"]
+        loss = cross_entropy(logits, batch["labels"], cfg.vocab)
+        return loss, (loss, jax.lax.stop_gradient(stale))
+
+    def stale_loss(params, batch, stale):
+        x = params["emb"][batch["tokens"]]
+        out, aux, _ = tfm._glasu_trunk(params, x, cfg, cfg.sliding_window,
+                                       stale=stale)
+        from ..models.layers import rmsnorm
+        h = rmsnorm(params["final_norm"], out)
+        logits = h @ params["unemb"]
+        return cross_entropy(logits, batch["labels"], cfg.vocab)
+
+    def train_step(state: TrainState, batch):
+        (_, (loss0, stale)), grads = jax.value_and_grad(
+            joint_and_stale_loss, has_aux=True)(state.params, batch)
+        grads, _ = opt_lib.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = opt_lib.apply_updates(state.params, updates)
+
+        def micro(carry, _):
+            p, s = carry
+            l, g = jax.value_and_grad(stale_loss)(p, batch, stale)
+            g, _ = opt_lib.clip_by_global_norm(g, 1.0)
+            u, s = optimizer.update(g, s, p)
+            p = opt_lib.apply_updates(p, u)
+            return (p, s), l
+
+        (params, opt_state), losses = jax.lax.scan(
+            micro, (params, opt_state), None, length=q_steps - 1)
+        return (TrainState(params, opt_state, state.step + q_steps),
+                {"loss": loss0, "aux": jnp.zeros(()),
+                 "grad_norm": jnp.zeros(())})
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape):
+    """Decode one token against seq_len-deep caches (prefilled stand-in)."""
+
+    def init_serve_state(key):
+        params = tfm.init_lm(key, cfg)
+        caches = tfm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                 prefill_len=min(shape.seq_len - 1,
+                                                 shape.seq_len))
+        return params, caches
+
+    def serve_step(params, caches, token, enc_out=None):
+        return tfm.lm_decode_step(params, caches, cfg, token, enc_out=enc_out)
+
+    return init_serve_state, serve_step

@@ -1,0 +1,108 @@
+"""Graph data structures for vertically-partitioned GNN training.
+
+Host-side (numpy) CSR graphs. Each VFL client holds the SAME node set but its
+own edge set ``E_m`` and a disjoint feature block ``X_m`` (paper §2.1). The
+JAX side only ever sees padded, static-shape index tensors produced by the
+sampler; the CSR structures here stay on host — mirroring the paper, where
+sampling (Alg 2) is a host/server coordination step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Graph:
+    """Undirected graph in CSR with per-node features/labels."""
+
+    n_nodes: int
+    indptr: np.ndarray          # (N+1,) int64
+    indices: np.ndarray         # (nnz,) int32 neighbor ids
+    features: np.ndarray        # (N, d) float32
+    labels: np.ndarray          # (N,) int32
+    train_idx: np.ndarray
+    val_idx: np.ndarray
+    test_idx: np.ndarray
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def feat_dim(self) -> int:
+        return int(self.features.shape[1])
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.labels.max()) + 1
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return self.indices[self.indptr[i]:self.indptr[i + 1]]
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def padded_neighbor_table(self, max_deg: int, rng: np.random.Generator,
+                              include_self: bool = True):
+        """(N, max_deg+1) neighbor table for exact chunked full-graph eval.
+
+        Column 0 is the node itself (self-loop). Nodes with more than
+        ``max_deg`` neighbors get a uniform subsample (deterministic given
+        ``rng``) — this is the eval-time analogue of FastGCN sampling.
+        Returns (idx, mask) int32/float32.
+        """
+        n = self.n_nodes
+        width = max_deg + (1 if include_self else 0)
+        idx = np.zeros((n, width), dtype=np.int32)
+        mask = np.zeros((n, width), dtype=np.float32)
+        for i in range(n):
+            nbrs = self.neighbors(i)
+            if len(nbrs) > max_deg:
+                nbrs = rng.choice(nbrs, size=max_deg, replace=False)
+            off = 0
+            if include_self:
+                idx[i, 0] = i
+                mask[i, 0] = 1.0
+                off = 1
+            idx[i, off:off + len(nbrs)] = nbrs
+            mask[i, off:off + len(nbrs)] = 1.0
+        return idx, mask
+
+
+def edges_to_csr(n_nodes: int, edges: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetrize an (E, 2) edge list into CSR (indptr, indices)."""
+    if edges.size == 0:
+        return np.zeros(n_nodes + 1, np.int64), np.zeros(0, np.int32)
+    und = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    und = np.unique(und, axis=0)
+    und = und[und[:, 0] != und[:, 1]]  # no explicit self loops (added by sampler)
+    order = np.lexsort((und[:, 1], und[:, 0]))
+    und = und[order]
+    counts = np.bincount(und[:, 0], minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, und[:, 1].astype(np.int32)
+
+
+@dataclass
+class VFLDataset:
+    """M client views of one vertically-partitioned graph dataset."""
+
+    name: str
+    clients: List[Graph]            # client m: own E_m, features X_m (N, d_m)
+    full: Graph                     # union graph with full features (centralized baseline)
+    n_classes: int = field(init=False)
+
+    def __post_init__(self):
+        self.n_classes = self.full.n_classes
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.full.n_nodes

@@ -1,0 +1,200 @@
+"""FastGCN-style layer-wise neighborhood sampling for GLASU (paper Alg 2).
+
+Semantics reproduced from the paper:
+
+  * ``S[L]`` (the mini-batch) is shared across clients.
+  * Aggregation at layer ``l`` requires the *output* node set ``S[l+1]`` to be
+    shared: the server takes the union of the clients' index sets and
+    broadcasts it (Alg 2's ``Aggregate``/``Broadcast``).
+  * At layers where aggregation is skipped (lazy aggregation), every client
+    samples and keeps its OWN node set ``S_m[l]`` — the extra flexibility the
+    paper highlights in §3.2.
+
+TPU adaptation: XLA wants static shapes, so every per-layer node set is padded
+to a precomputed size and the bipartite adjacency ``A(E[l])`` is represented
+as a (n_{l+1}, fanout+1) gather-index tensor (column 0 = self loop) with a
+validity mask; aggregation is a masked mean (GraphSAGE-mean normalization).
+Sampling itself runs on host in numpy — exactly as in the paper, where it is
+server/client coordination, not accelerator work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, NamedTuple, Sequence
+
+import numpy as np
+
+from .graph import Graph, VFLDataset
+
+
+class SampledBatch(NamedTuple):
+    """Static-shape mini-batch for one GLASU round (all clients stacked)."""
+
+    feats: np.ndarray                 # (M, n0, d_pad) f32 client-0-layer features
+    gather_idx: tuple                 # per layer l: (M, n_{l+1}, F+1) int32
+    gather_mask: tuple                # per layer l: (M, n_{l+1}, F+1) f32
+    row_valid: tuple                  # per layer l: (M, n_{l+1}) f32 (1 = real row)
+    labels: np.ndarray                # (S,) int32
+    self_pos: tuple                   # per layer l: (M, n_{l+1}) int32 pos of S[l+1] in S[l]
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.gather_idx)
+
+
+def _padded_tables(g: Graph, cap: int, rng: np.random.Generator):
+    """Pre-pack CSR into a (N, cap) neighbor table for vectorized sampling."""
+    n = g.n_nodes
+    table = np.full((n, cap), -1, dtype=np.int32)
+    deg = np.zeros(n, dtype=np.int32)
+    for i in range(n):
+        nbrs = g.neighbors(i)
+        if len(nbrs) > cap:
+            nbrs = rng.choice(nbrs, size=cap, replace=False)
+        table[i, :len(nbrs)] = nbrs
+        deg[i] = len(nbrs)
+    return table, deg
+
+
+@dataclass
+class SamplerConfig:
+    n_layers: int = 4
+    agg_layers: Sequence[int] = (1, 3)   # paper's "uniform" K=2 for L=4
+    batch_size: int = 16
+    fanout: int = 3
+    size_cap: int = 512
+    table_cap: int = 64                  # hub-node pre-subsample (Reddit/HeriGraph)
+
+
+class GlasuSampler:
+    """Produces SampledBatch rounds; owns per-client padded neighbor tables."""
+
+    def __init__(self, data: VFLDataset, cfg: SamplerConfig, seed: int = 0):
+        assert (cfg.n_layers - 1) in cfg.agg_layers, \
+            "final layer must aggregate (clients need a shared H[L])"
+        self.data = data
+        self.cfg = cfg
+        self.rng = np.random.default_rng(seed)
+        self.M = data.n_clients
+        table_rng = np.random.default_rng(seed + 1)
+        self.tables = [_padded_tables(c, cfg.table_cap, table_rng) for c in data.clients]
+        self.d_pad = max(c.feat_dim for c in data.clients)
+        self.layer_sizes = self._plan_sizes()
+
+    # ``S[j]`` is shared iff (j-1) in I or j == L.
+    def _shared(self, j: int) -> bool:
+        return j == self.cfg.n_layers or (j - 1) in self.cfg.agg_layers
+
+    def _plan_sizes(self) -> List[int]:
+        cfg = self.cfg
+        sizes = [0] * (cfg.n_layers + 1)
+        sizes[cfg.n_layers] = cfg.batch_size
+        for l in range(cfg.n_layers - 1, -1, -1):
+            mult = self.M if (self._shared(l) and not self._shared(l + 1)) else 1
+            bound = mult * sizes[l + 1] * (cfg.fanout + 1)
+            # center nodes can never be dropped -> floor of mult * n_{l+1}
+            sizes[l] = max(min(bound, cfg.size_cap), mult * sizes[l + 1])
+        return sizes
+
+    def _sample_neighbors(self, m: int, centers: np.ndarray) -> np.ndarray:
+        """(n, F) sampled neighbor ids for client m (with replacement), -1 pad."""
+        table, deg = self.tables[m]
+        f = self.cfg.fanout
+        valid = centers >= 0
+        safe = np.where(valid, centers, 0)
+        d = deg[safe]
+        cols = (self.rng.integers(0, 1 << 30, size=(len(centers), f))
+                % np.maximum(d, 1)[:, None]).astype(np.int64)
+        nb = table[safe[:, None], cols]
+        nb = np.where((d[:, None] > 0) & valid[:, None], nb, -1)
+        return nb.astype(np.int32)
+
+    @staticmethod
+    def _build_set(centers_list, nbrs_list, size) -> np.ndarray:
+        """Order: unique centers first (never dropped), then other candidates."""
+        centers = np.unique(np.concatenate(centers_list))
+        centers = centers[centers >= 0]
+        others = np.unique(np.concatenate([x.ravel() for x in nbrs_list]))
+        others = others[others >= 0]
+        others = np.setdiff1d(others, centers, assume_unique=True)
+        if len(centers) > size:
+            raise RuntimeError("layer size too small for center set")
+        room = size - len(centers)
+        if len(others) > room:
+            others = others[:room]  # deterministic truncation
+        s = np.concatenate([centers, others])
+        out = np.full(size, -1, dtype=np.int32)
+        out[:len(s)] = s
+        return out
+
+    @staticmethod
+    def _positions(node_set: np.ndarray, query: np.ndarray):
+        """positions of ``query`` ids in ``node_set`` (-1 if absent)."""
+        order = np.argsort(node_set, kind="stable")
+        sorted_set = node_set[order]
+        q = query.ravel()
+        loc = np.searchsorted(sorted_set, q)
+        loc = np.clip(loc, 0, len(sorted_set) - 1)
+        hit = (sorted_set[loc] == q) & (q >= 0)
+        pos = np.where(hit, order[loc], -1)
+        return pos.reshape(query.shape).astype(np.int32)
+
+    def sample_round(self) -> SampledBatch:
+        cfg, M = self.cfg, self.M
+        L = cfg.n_layers
+        train_idx = self.data.full.train_idx
+        batch = self.rng.choice(train_idx, size=cfg.batch_size,
+                                replace=len(train_idx) < cfg.batch_size).astype(np.int32)
+        cur = [batch.copy() for _ in range(M)]      # S_m[L] (shared)
+        gidx, gmask, rvalid, spos = [None] * L, [None] * L, [None] * L, [None] * L
+
+        for l in range(L - 1, -1, -1):
+            nbrs = [self._sample_neighbors(m, cur[m]) for m in range(M)]
+            size = self.layer_sizes[l]
+            if self._shared(l):
+                shared_set = self._build_set(cur, nbrs, size)
+                sets = [shared_set] * M
+            else:
+                sets = [self._build_set([cur[m]], [nbrs[m]], size) for m in range(M)]
+
+            gi = np.zeros((M, self.layer_sizes[l + 1], cfg.fanout + 1), np.int32)
+            gm = np.zeros_like(gi, dtype=np.float32)
+            rv = np.zeros((M, self.layer_sizes[l + 1]), np.float32)
+            sp = np.zeros((M, self.layer_sizes[l + 1]), np.int32)
+            for m in range(M):
+                cpos = self._positions(sets[m], cur[m])          # self positions
+                npos = self._positions(sets[m], nbrs[m])         # neighbor positions
+                gi[m, :, 0] = np.maximum(cpos, 0)
+                gm[m, :, 0] = (cpos >= 0).astype(np.float32)
+                gi[m, :, 1:] = np.maximum(npos, 0)
+                gm[m, :, 1:] = (npos >= 0).astype(np.float32)
+                rv[m] = (cur[m] >= 0).astype(np.float32)
+                gm[m] *= rv[m][:, None]
+                sp[m] = np.maximum(cpos, 0)
+            gidx[l], gmask[l], rvalid[l], spos[l] = gi, gm, rv, sp
+            cur = sets
+
+        feats = np.zeros((M, self.layer_sizes[0], self.d_pad), np.float32)
+        for m in range(M):
+            s = cur[m]
+            ok = s >= 0
+            x = self.data.clients[m].features
+            feats[m, ok, :x.shape[1]] = x[s[ok]]
+        labels = self.data.full.labels[batch].astype(np.int32)
+        return SampledBatch(feats, tuple(gidx), tuple(gmask), tuple(rvalid),
+                            labels, tuple(spos))
+
+    def comm_bytes_per_joint_inference(self, hidden: int, agg: str = "mean") -> int:
+        """Paper cost model: per aggregation layer, every client uploads its
+        (n_{l+1}, h) block and receives the aggregate back; plus index sync."""
+        total = 0
+        for l in self.cfg.agg_layers:
+            n = self.layer_sizes[l + 1]
+            up = self.M * n * hidden * 4
+            down_h = hidden * (self.M if agg == "concat" else 1)
+            down = self.M * n * down_h * 4
+            total += up + down
+        for j in range(self.cfg.n_layers + 1):
+            if self._shared(j):
+                total += 2 * self.M * self.layer_sizes[j] * 4  # index union sync
+        return total

@@ -1,0 +1,30 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes in Python/XLA for correctness validation; on TPU the same
+``pallas_call`` lowers to Mosaic. The switch is automatic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention_pallas
+from .graph_agg import graph_agg_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+@jax.jit
+def graph_agg(h, idx, mask, w):
+    return graph_agg_pallas(h, idx, mask, w, interpret=_interpret())

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def graph_agg_ref(h, idx, mask, w):
+    """GLASU client sub-layer hotspot: masked-mean neighbor gather + matmul.
+
+    h: (n_src, d); idx/mask: (n_dst, F); w: (d, d_out) -> (n_dst, d_out).
+    """
+    g = h[idx]                                     # (n_dst, F, d)
+    s = jnp.sum(g * mask[..., None], axis=1)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    return (s / denom) @ w
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B, S, H, dh); k/v: (B, T, Kv, dh) -> (B, S, H, dh)."""
+    b, s, h, dh = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(dh)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = jnp.ones((s, t), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    scores = jnp.where(m[None, None, None], scores, -1e30)
+    att = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", att, v)
+    return out.reshape(b, s, h, dh)

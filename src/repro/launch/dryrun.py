@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (mandate e): lower + compile every (architecture x
+input shape) on the production meshes, print memory/cost analysis, and
+extract the collective schedule for the roofline analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the 512 placeholder host devices exist ONLY here — smoke tests and
+benchmarks see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ARCH_IDS, INPUT_SHAPES, ArchConfig, InputShape, get_arch
+from ..core.steps import make_serve_step, make_train_step
+from ..data.pipeline import input_specs
+from ..models.layers import activation_mesh
+from . import hlo_cost
+from . import sharding as shd
+from .mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "u32": 4, "s32": 4,
+                "u8": 1, "s8": 1, "pred": 1, "u16": 2, "s16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "u64": 8, "s64": 8, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_overrides(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Per-shape config adjustments (documented in DESIGN.md §4).
+
+    long_500k requires sub-quadratic attention: attention-bearing archs get a
+    sliding window (ring-buffer KV cache); SSM archs run natively.
+    """
+    if shape.name == "long_500k" and cfg.attn != "none" and cfg.block != "rwkv6":
+        cfg = cfg.with_(sliding_window=8192)
+    return cfg
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device result bytes of every cross-device collective op.
+
+    Methodology (EXPERIMENTS.md §Roofline): ring-algorithm cost ~ result
+    bytes x (n-1)/n ~ result bytes; all-reduce counts twice (reduce-scatter
+    + all-gather phases). Shapes in the partitioned module are per-device.
+    """
+    stats = {}
+    pat = re.compile(
+        r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" + "|".join(_COLLECTIVES)
+        + r")(?:-start)?\(")
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        b = n * _DTYPE_BYTES[dt]
+        if op == "all-reduce":
+            b *= 2
+        rec = stats.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    return stats
+
+
+def memory_dict(compiled):
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
+def lower_train(cfg: ArchConfig, shape: InputShape, mesh):
+    init_state, train_step = make_train_step(cfg)
+    state_abs = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    batch_abs = input_specs(cfg, shape)
+
+    pspecs = shd.param_specs(state_abs.params, mesh)
+    ospecs = shd.opt_state_specs(state_abs.opt_state, pspecs, mesh)
+    state_specs = type(state_abs)(pspecs, ospecs, P())
+    state_sh = shd.tree_shardings(state_specs, mesh)
+    batch_sh = shd.batch_shardings(cfg, shape, batch_abs, mesh)
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "aux": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+
+    with activation_mesh(mesh):
+        lowered = jax.jit(
+            train_step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),
+        ).lower(state_abs, batch_abs)
+    return lowered
+
+
+def lower_prefill(cfg: ArchConfig, shape: InputShape, mesh):
+    """Inference prefill: full forward over (B, S) tokens -> last-pos logits.
+
+    Compute-equivalent to KV-cache-filling prefill (cache writes are free
+    relative to the matmuls); no loss, no backward, no optimizer.
+    """
+    from ..models import transformer as tfm
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if cfg.is_encdec:
+            kwargs["src_embeds"] = batch["src_embeds"]
+            kwargs["tokens"] = batch["tokens"]
+        elif cfg.frontend == "vision":
+            kwargs["embeds"] = batch["patch_embeds"]
+            kwargs["tokens"] = batch["tokens"]
+        else:
+            kwargs["tokens"] = batch["tokens"]
+        hidden, _ = tfm.lm_forward(params, cfg, return_hidden=True, **kwargs)
+        logits = hidden[:, -1:] @ params["unemb"]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    params_abs = jax.eval_shape(
+        lambda k: tfm.init_lm(k, cfg), jax.random.PRNGKey(0))
+    batch_abs = {k: v for k, v in input_specs(
+        cfg, InputShape(shape.name, shape.seq_len, shape.global_batch,
+                        "train")).items() if k != "labels"}
+    pspecs = shd.param_specs(params_abs, mesh)
+    p_sh = shd.tree_shardings(pspecs, mesh)
+    batch_sh = shd.batch_shardings(cfg, shape, batch_abs, mesh)
+    out_sh = NamedSharding(mesh, P())
+
+    with activation_mesh(mesh):
+        lowered = jax.jit(
+            prefill_step, in_shardings=(p_sh, batch_sh),
+            out_shardings=out_sh,
+        ).lower(params_abs, batch_abs)
+    return lowered
+
+
+def lower_serve(cfg: ArchConfig, shape: InputShape, mesh):
+    init_serve, serve_step = make_serve_step(cfg, shape)
+    params_abs, caches_abs = jax.eval_shape(init_serve, jax.random.PRNGKey(0))
+    specs = input_specs(cfg, shape)
+
+    pspecs = shd.param_specs(params_abs, mesh)
+    cspecs = shd.cache_specs(cfg, shape, caches_abs, mesh)
+    p_sh = shd.tree_shardings(pspecs, mesh)
+    c_sh = shd.tree_shardings(cspecs, mesh)
+    tok_sh = NamedSharding(mesh, shd.batch_spec(cfg, shape, mesh, "token",
+                                                specs["token"].shape))
+    args = [params_abs, caches_abs, specs["token"]]
+    in_sh = [p_sh, c_sh, tok_sh]
+    if "enc_out" in specs:
+        enc_sh = NamedSharding(mesh, shd.batch_spec(
+            cfg, shape, mesh, "enc_out", specs["enc_out"].shape))
+        args.append(specs["enc_out"])
+        in_sh.append(enc_sh)
+
+        def step(params, caches, token, enc_out):
+            return serve_step(params, caches, token, enc_out=enc_out)
+    else:
+        step = serve_step
+
+    with activation_mesh(mesh):
+        lowered = jax.jit(
+            step,
+            in_shardings=tuple(in_sh),
+            out_shardings=(tok_sh, c_sh),
+            donate_argnums=(1,),
+        ).lower(*args)
+    return lowered
+
+
+def run_combo(arch_id: str, shape_name: str, multi_pod: bool,
+              cfg_override=None):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = cfg_override or get_arch(arch_id)
+    cfg = shape_overrides(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "mode": shape.mode, "ok": False}
+    t0 = time.perf_counter()
+    try:
+        if shape.mode == "train":
+            lowered = lower_train(cfg, shape, mesh)
+        elif shape.mode == "prefill":
+            lowered = lower_prefill(cfg, shape, mesh)
+        else:
+            lowered = lower_serve(cfg, shape, mesh)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        mem = memory_dict(compiled)
+        cost = cost_dict(compiled)
+        walk = hlo_cost.analyze(compiled.as_text())
+        print(f"  memory_analysis: {mem}")
+        print(f"  hlo-walk (trip-count-aware): flops={walk['flops']:.3e} "
+              f"hbm_bytes={walk['hbm_bytes']:.3e} "
+              f"collective_bytes={walk['collective_bytes']:.3e}")
+        rec.update(ok=True, lower_s=t1 - t0, compile_s=t2 - t1, memory=mem,
+                   cost_raw=cost, flops=walk["flops"],
+                   hbm_bytes=walk["hbm_bytes"],
+                   collectives=walk["collectives"],
+                   collective_bytes=walk["collective_bytes"],
+                   n_devices=int(np.prod(list(mesh.shape.values()))),
+                   params=int(cfg.param_count()),
+                   active_params=int(cfg.active_param_count()),
+                   seq_len=shape.seq_len, global_batch=shape.global_batch)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = time.perf_counter() - t0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = outdir / f"{tag}.json"
+                if args.skip_existing and path.exists():
+                    old = json.loads(path.read_text())
+                    if old.get("ok"):
+                        print(f"[skip] {tag}")
+                        continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                rec = run_combo(arch, shape, mp)
+                path.write_text(json.dumps(rec, indent=1))
+                status = "OK" if rec["ok"] else f"FAIL ({rec.get('error')})"
+                n_fail += 0 if rec["ok"] else 1
+                print(f"[dryrun] {tag}: {status} "
+                      f"({rec['total_s']:.1f}s)", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` on XLA:CPU counts every while-loop body ONCE —
+a scanned 126-layer stack or an 8-microbatch accumulation loop under-reports
+by the trip count (verified: a 10-iteration scan of a matmul reports 1
+matmul). This walker parses ``compiled.as_text()`` and accumulates, with
+loop multipliers:
+
+  * flops            — 2*M*N*K for dot ops (recursing INTO fusions),
+                       convolutions approximated as dots
+  * hbm_bytes        — operand + result bytes at FUSION BOUNDARY granularity
+                       (fusion internals never touch HBM under XLA's model)
+  * collective bytes — per collective op kind, result bytes (all-reduce x2)
+
+Methodology notes live in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "u32": 4, "s32": 4,
+                "u8": 1, "s8": 1, "pred": 1, "u16": 2, "s16": 2, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.+?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "opcode", "rest")
+
+    def __init__(self, name, type_str, opcode, rest):
+        self.name, self.type_str, self.opcode, self.rest = \
+            name, type_str, opcode, rest
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, list] = {}
+        self.instr_types: Dict[str, Dict[str, str]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, dict] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        self.entry = None
+        for line in text.splitlines():
+            m = re.match(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$", line)
+            if m:
+                cur = m.group(2)
+                self.comps[cur] = []
+                self.instr_types[cur] = {}
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                continue
+            im = _INSTR_RE.match(line)
+            if im:
+                ins = Instr(im.group(1), im.group(2), im.group(3), im.group(4))
+                self.comps[cur].append(ins)
+                self.instr_types[cur][ins.name] = ins.type_str
+
+    # ------------------------------------------------------------- helpers
+    def _called(self, rest: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Scan/fori conditions compare an induction var to a constant."""
+        best = 1
+        for ins in self.comps.get(cond_comp, ()):
+            if ins.opcode == "constant":
+                m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+                if m:
+                    best = max(best, int(m.group(1)))
+        return best
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        _, out_dims = _shape_dims(ins.type_str)
+        out = 1
+        for d in out_dims:
+            out *= d
+        # contracted size from lhs shape + contracting dims
+        ops = re.findall(r"%([\w\.\-]+)", ins.rest)
+        lhs_type = self.instr_types[comp].get(ops[0], "") if ops else ""
+        _, lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rest)
+        contracted = 1
+        if m and lhs_dims:
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    contracted *= lhs_dims[int(d)]
+        return 2.0 * out * contracted
+
+    def _operand_bytes(self, comp: str, ins: Instr) -> int:
+        ops = re.findall(r"%([\w\.\-]+)", ins.rest.split("),")[0] + ")")
+        total = 0
+        for o in ops:
+            t = self.instr_types[comp].get(o)
+            if t:
+                total += _shape_bytes(t)
+        return total
+
+    # ---------------------------------------------------------------- walk
+    def comp_cost(self, comp: str) -> dict:
+        if comp in self._memo:
+            return self._memo[comp]
+        acc = {"flops": 0.0, "hbm_bytes": 0.0,
+               "collectives": {k: {"count": 0.0, "bytes": 0.0}
+                               for k in _COLL_OPS}}
+        self._memo[comp] = acc  # guard cycles
+        for ins in self.comps.get(comp, ()):
+            op = ins.opcode
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all") or op.endswith("-done"):
+                continue
+            if op == "while":
+                body = self._called(ins.rest, "body")
+                cond = self._called(ins.rest, "condition")
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"', ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = self._trip_count(cond) if cond else 1
+                sub = self.comp_cost(body) if body else None
+                if sub:
+                    self._add(acc, sub, trips)
+                continue
+            if op in ("fusion", "call", "custom-call", "async-start"):
+                callee = (self._called(ins.rest, "calls")
+                          or self._called(ins.rest, "to_apply"))
+                if callee:
+                    sub = self.comp_cost(callee)
+                    acc["flops"] += sub["flops"]
+                    # fusion internals do not touch HBM; charge the boundary
+                    acc["hbm_bytes"] += (_shape_bytes(ins.type_str)
+                                         + self._operand_bytes(comp, ins))
+                    for k, v in sub["collectives"].items():
+                        acc["collectives"][k]["count"] += v["count"]
+                        acc["collectives"][k]["bytes"] += v["bytes"]
+                    continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      ins.rest)
+                if branches:
+                    subs = [self.comp_cost(b.strip().lstrip("%"))
+                            for b in branches[0].split(",")]
+                    if subs:
+                        big = max(subs, key=lambda s: s["flops"])
+                        self._add(acc, big, 1)
+                continue
+            base = op.replace("-start", "")
+            if base in _COLL_OPS:
+                b = _shape_bytes(ins.type_str)
+                if base == "all-reduce":
+                    b *= 2
+                acc["collectives"][base]["count"] += 1
+                acc["collectives"][base]["bytes"] += b
+                acc["hbm_bytes"] += _shape_bytes(ins.type_str)
+                continue
+            if base in ("dot", "convolution"):
+                acc["flops"] += self._dot_flops(comp, ins)
+            acc["hbm_bytes"] += (_shape_bytes(ins.type_str)
+                                 + self._operand_bytes(comp, ins))
+        self._memo[comp] = acc
+        return acc
+
+    @staticmethod
+    def _add(acc, sub, mult):
+        acc["flops"] += sub["flops"] * mult
+        acc["hbm_bytes"] += sub["hbm_bytes"] * mult
+        for k, v in sub["collectives"].items():
+            acc["collectives"][k]["count"] += v["count"] * mult
+            acc["collectives"][k]["bytes"] += v["bytes"] * mult
+
+    def entry_cost(self) -> dict:
+        entry = self.entry or next(iter(self.comps))
+        cost = self.comp_cost(entry)
+        out = dict(cost)
+        out["collectives"] = {k: v for k, v in cost["collectives"].items()
+                              if v["count"]}
+        out["collective_bytes"] = sum(v["bytes"]
+                                      for v in cost["collectives"].values())
+        out["entry"] = entry
+        return out
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloCost(hlo_text).entry_cost()

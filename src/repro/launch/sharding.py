@@ -1,0 +1,214 @@
+"""Sharding-spec inference for the architecture zoo.
+
+Parameter specs are derived from leaf *names* (the init functions use a
+stable naming convention) with structural overrides for expert-stacked and
+client-stacked weights. Every rule is divisibility-guarded: a dim that the
+mesh axis does not divide falls back to replication (e.g. yi-34b's 56 heads
+on a 16-way model axis shard the flat head*dh dim instead of the head axis).
+
+Activation sharding is applied inside model code via layers.shard(); this
+module covers jit boundary in/out shardings: params, optimizer state,
+batches, and decode caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, InputShape
+from ..optim.optimizers import AdafactorState, AdamState, SGDState
+
+# leaf name -> spec for the TRAILING dims (left-padded with None)
+_NAME_RULES = {
+    "emb": ("model", None),
+    "unemb": (None, "model"),
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wg": (None, "model"), "wr": (None, "model"),
+    "wo": ("model", None),
+    "w_gate": (None, "model"), "w_up": (None, "model"), "w_down": ("model", None),
+    "w_uk": (None, "model"), "w_uv": (None, "model"),
+    "w_dkv": (), "w_kr": (), "router": (),
+    "w_in": (None, "model"), "w_out": ("model", None),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "A_log": ("model",), "D": ("model",), "dt_bias": ("model",),
+    "w_A": (), "w_B": (None, "model"),
+    "u": ("model", None),
+    "mix": (), "w_base": ("model",),
+    "g": (), "b": (),
+    "b_up": ("model",), "b_down": (),
+}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def _guard(mesh: Mesh, shape, spec):
+    """Replace axis names that don't exist or don't divide the dim."""
+    out = []
+    for dim, s in zip(shape, spec):
+        size = _axis_size(mesh, s)
+        out.append(s if size and dim % size == 0 and size > 1 else None)
+    return P(*out)
+
+
+def _leaf_spec(path, leaf, mesh: Mesh) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = keys[-1]
+    in_moe = "moe" in keys and "shared" not in keys
+    in_locals = "locals" in keys
+    nd = leaf.ndim
+    if in_locals:
+        # (n_groups, sync_every-1, M, ...) — shard the client axis
+        spec = [None] * nd
+        if nd >= 3:
+            spec[2] = "model"
+        return _guard(mesh, leaf.shape, spec)
+    if in_moe and name in ("w_gate", "w_up", "w_down") and nd >= 3:
+        # (..., E, d, f) — expert parallel
+        spec = [None] * nd
+        spec[nd - 3] = "model"
+        return _guard(mesh, leaf.shape, spec)
+    rule = _NAME_RULES.get(name, ())
+    spec = [None] * (nd - len(rule)) + list(rule)
+    spec = spec[:nd]
+    spec = _add_fsdp(mesh, leaf, spec)
+    return _guard(mesh, leaf.shape, spec)
+
+
+_FSDP_MIN_BYTES = 16 * 2**20
+
+
+def _add_fsdp(mesh, leaf, spec):
+    """ZeRO-3-style: large weights additionally shard a free dim over 'data'
+    (GSPMD all-gathers per layer inside the scan). Without this, llama3-405b
+    weights are 50 GB/chip at TP=16."""
+    if "data" not in mesh.axis_names:
+        return spec
+    try:
+        nbytes = leaf.size * leaf.dtype.itemsize
+    except Exception:
+        return spec
+    if nbytes < _FSDP_MIN_BYTES or leaf.ndim < 2:
+        return spec
+    dp = mesh.shape["data"]
+    # pick the largest unsharded trailing dim divisible by the data axis
+    best, best_dim = None, 0
+    for i in range(leaf.ndim - 1, 0, -1):
+        if spec[i] is None and leaf.shape[i] % dp == 0 and leaf.shape[i] > best_dim:
+            best, best_dim = i, leaf.shape[i]
+    if best is not None:
+        spec = list(spec)
+        spec[best] = "data"
+    return spec
+
+
+def param_specs(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh), params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, mesh))
+
+
+def opt_state_specs(opt_state, pspecs, mesh: Mesh):
+    """Optimizer-state specs derived structurally from the param specs."""
+    scalar = P()
+    if isinstance(opt_state, AdamState):
+        return AdamState(scalar, pspecs, pspecs)
+    if isinstance(opt_state, SGDState):
+        mom = pspecs if opt_state.momentum is not None else None
+        return SGDState(scalar, mom)
+    if isinstance(opt_state, AdafactorState):
+        def fit(leaf, s):
+            """Trim/align the param spec to the factored leaf's actual rank."""
+            if leaf.ndim == 0:
+                return P()
+            t = (list(s) + [None] * leaf.ndim)[:leaf.ndim]
+            return P(*t)
+
+        def map2(fn, tree_sds):
+            leaves, treedef = jax.tree.flatten(tree_sds)
+            specs = treedef.flatten_up_to(pspecs)  # P leaves stay intact
+            return treedef.unflatten([fn(l, s) for l, s in zip(leaves, specs)])
+
+        vr = map2(lambda le, s: fit(le, list(s)[:-1] if len(s) else []),
+                  opt_state.vr)
+        vc = map2(lambda le, s: fit(le, (list(s)[:-2] + list(s)[-1:])
+                                    if len(s) >= 2 else list(s)),
+                  opt_state.vc)
+        v = map2(lambda le, s: fit(le, list(s)), opt_state.v)
+        return AdafactorState(scalar, vr, vc, v)
+    raise ValueError(f"unknown optimizer state {type(opt_state)}")
+
+
+def batch_spec(cfg: ArchConfig, shape: InputShape, mesh: Mesh, name: str,
+               arr_shape) -> P:
+    dp = _axis_size(mesh, ("pod", "data") if "pod" in mesh.axis_names
+                    else ("data",))
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    batch = arr_shape[0]
+    first = dp_axes if batch % dp == 0 and dp > 1 else None
+    rest = [None] * (len(arr_shape) - 1)
+    if name in ("src_embeds", "patch_embeds", "enc_out"):
+        pass  # (B, T, D): feature dim replicated (consumed by full-width layers)
+    return P(first, *rest)
+
+
+def batch_shardings(cfg: ArchConfig, shape: InputShape, specs_or_batch,
+                    mesh: Mesh):
+    return {k: NamedSharding(mesh, batch_spec(cfg, shape, mesh, k, v.shape))
+            for k, v in specs_or_batch.items()}
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape, caches, mesh: Mesh):
+    """Decode-cache shardings.
+
+    Leaves are (L, B, C, heads, dh)-ish stacks. Policy: shard batch over
+    (pod, data) when divisible; otherwise (long_500k, B=1) shard the cache
+    *sequence* dim over 'data'. Head/state axes shard over 'model' when
+    divisible.
+    """
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = _axis_size(mesh, dp_axes)
+    batch = shape.global_batch
+    batch_ok = batch % dp == 0 and dp > 1
+
+    def leaf_rule(path, leaf):
+        nd = leaf.ndim
+        if nd == 0 or leaf.dtype == jnp.int32:
+            return P()
+        spec = [None] * nd
+        # dim 0 is the layer stack; dim 1 is batch (for stacked caches)
+        if nd >= 2:
+            if batch_ok and leaf.shape[1] == batch:
+                spec[1] = dp_axes
+            elif not batch_ok and nd >= 3 and leaf.shape[2] >= dp:
+                # shard sequence dim over data (flash-decode style)
+                if leaf.shape[2] % dp == 0:
+                    spec[2] = dp_axes
+        # shard a head-like axis over model: prefer dim -2 for (…, H, dh)
+        tp = _axis_size(mesh, "model")
+        for cand in (nd - 2, nd - 1):
+            if cand is not None and cand >= 2 and spec[cand] is None:
+                if leaf.shape[cand] % tp == 0 and leaf.shape[cand] >= tp > 1:
+                    spec[cand] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_rule, caches)
+
+
+def tree_shardings(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,277 @@
+"""Attention variants: GQA/MHA/MQA, sliding-window, MLA (DeepSeek), cross-attn.
+
+Prefill paths take (B, S, D); decode paths take one token with a KV cache —
+either a full-length cache or a ring buffer when a sliding window is set
+(the long_500k memory story). All matmuls keep the head axis last-but-one so
+the 'model' mesh axis shards heads.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (BATCH, apply_rope, dense_init, rmsnorm, rmsnorm_init,
+                     shard, wcol, wrow)
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------------ GQA
+def gqa_init(key, d_model, n_heads, n_kv, d_head, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * d_head, dtype=dtype),
+        "wk": dense_init(k2, d_model, n_kv * d_head, dtype=dtype),
+        "wv": dense_init(k3, d_model, n_kv * d_head, dtype=dtype),
+        "wo": dense_init(k4, n_heads * d_head, d_model, dtype=dtype),
+    }
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,dh), k/v: (B,T,Kv,dh), mask: (B?,1?,S,T) bool -> (B,S,H,dh)."""
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask, scores, NEG_INF)
+    att = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", att, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def causal_mask(s, t=None, window: Optional[int] = None, offset: int = 0):
+    """(1, 1, s, t) boolean mask; ``offset`` = absolute pos of query 0."""
+    t = t if t is not None else s
+    qpos = jnp.arange(s)[:, None] + offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+CHUNK_THRESHOLD = 1024
+Q_CHUNK = 512
+
+
+def _sdpa_chunked(q, k, v, causal: bool, window: Optional[int],
+                  chunk: int = Q_CHUNK):
+    """Memory-efficient attention: scan over query chunks so the live score
+    block is (B, H, chunk, T) instead of (B, H, S, S) — the XLA analogue of
+    flash attention's tiling (the Pallas kernel is the TPU-native version).
+    With a sliding window only a (window + chunk) kv slice is touched."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk
+    qs = q.reshape(b, nq, chunk, h, dh)
+    use_slice = window is not None and causal and (window + chunk) < t
+    kv_span = min(window + chunk, t) if window is not None else t
+
+    @jax.checkpoint
+    def body(_, inp):
+        qi, i = inp                                     # (B, chunk, H, dh)
+        q_start = i * chunk
+        if use_slice:
+            lo = jnp.clip(q_start - window + 1, 0, t - kv_span)
+            ki = jax.lax.dynamic_slice_in_dim(k, lo, kv_span, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, lo, kv_span, axis=1)
+        else:
+            lo, ki, vi = 0, k, v
+        qpos = q_start + jnp.arange(chunk)[:, None]
+        kpos = lo + jnp.arange(ki.shape[1])[None, :]
+        m = kpos < t
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        out = _sdpa(qi, ki, vi, m[None, None])
+        return None, out
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qs, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * chunk, h, v.shape[-1])
+    return out[:, :s]
+
+
+def gqa_prefill(p, x, n_heads, n_kv, d_head, *, causal=True,
+                window: Optional[int] = None, use_rope=True, rope_theta=10000.0,
+                use_flash: bool = False):
+    b, s, d = x.shape
+    q = _split_heads(x @ wcol(p["wq"]), n_heads, d_head)
+    k = _split_heads(x @ wcol(p["wk"]), n_kv, d_head)
+    v = _split_heads(x @ wcol(p["wv"]), n_kv, d_head)
+    q = shard(q, BATCH, None, "model", None)
+    k = shard(k, BATCH, None, "model", None)
+    if use_rope:
+        pos = jnp.arange(s)[None]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if use_flash:
+        from ..kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    elif s > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, causal, window)
+    else:
+        if causal:
+            mask = causal_mask(s, window=window)
+        else:
+            mask = jnp.ones((1, 1, s, s), bool)
+        out = _sdpa(q, k, v, mask)
+    out = shard(out, BATCH, None, "model", None)
+    return out.reshape(b, s, n_heads * d_head) @ wrow(p["wo"])
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (B, C, Kv, dh) — C = seq_len or ring window
+    v: jnp.ndarray
+    pos: jnp.ndarray        # () int32: number of tokens already cached
+
+
+def kv_cache_init(batch, capacity, n_kv, d_head, dtype, prefill_len: int = 0):
+    """Fresh cache; ``prefill_len`` marks already-populated slots (dry-run)."""
+    return KVCache(jnp.zeros((batch, capacity, n_kv, d_head), dtype),
+                   jnp.zeros((batch, capacity, n_kv, d_head), dtype),
+                   jnp.asarray(prefill_len, jnp.int32))
+
+
+def gqa_decode(p, x, cache: KVCache, n_heads, n_kv, d_head, *, ring: bool = False,
+               use_rope=True, rope_theta=10000.0):
+    """One-token decode step. x: (B, 1, D) -> ((B, 1, D), new cache)."""
+    b, _, d = x.shape
+    cap = cache.k.shape[1]
+    q = _split_heads(x @ wcol(p["wq"]), n_heads, d_head)
+    k = _split_heads(x @ wcol(p["wk"]), n_kv, d_head)
+    v = _split_heads(x @ wcol(p["wv"]), n_kv, d_head)
+    pos = cache.pos
+    if use_rope:
+        pq = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+        q = apply_rope(q, pq, rope_theta)
+        k = apply_rope(k, pq, rope_theta)
+    slot = (pos % cap) if ring else jnp.minimum(pos, cap - 1)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_k = shard(new_k, BATCH, None, "model", None)
+    new_v = shard(new_v, BATCH, None, "model", None)
+    idx = jnp.arange(cap)
+    if ring:
+        # every slot holds one of the last ``cap`` tokens once pos >= cap
+        valid = jnp.where(pos >= cap, jnp.ones_like(idx, bool), idx <= pos)
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, :]
+    out = _sdpa(q, new_k, new_v, mask)
+    out = out.reshape(b, 1, n_heads * d_head) @ wrow(p["wo"])
+    return out, KVCache(new_k, new_v, pos + 1)
+
+
+# ------------------------------------------------------------------------ MLA
+def mla_init(key, d_model, n_heads, kv_lora, d_nope, d_rope, d_v,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * (d_nope + d_rope), dtype=dtype),
+        "w_dkv": dense_init(ks[1], d_model, kv_lora, dtype=dtype),
+        "w_kr": dense_init(ks[2], d_model, d_rope, dtype=dtype),
+        "kv_norm": rmsnorm_init(kv_lora, dtype),
+        "w_uk": dense_init(ks[3], kv_lora, n_heads * d_nope, dtype=dtype),
+        "w_uv": dense_init(ks[4], kv_lora, n_heads * d_v, dtype=dtype),
+        "wo": dense_init(ks[5], n_heads * d_v, d_model, dtype=dtype),
+    }
+
+
+def mla_prefill(p, x, n_heads, kv_lora, d_nope, d_rope, d_v, *, causal=True,
+                rope_theta=10000.0):
+    b, s, _ = x.shape
+    q = _split_heads(x @ wcol(p["wq"]), n_heads, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    pos = jnp.arange(s)[None]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    latent = rmsnorm(p["kv_norm"], x @ p["w_dkv"])           # (B,S,kvl)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], pos, rope_theta)
+    k_nope = _split_heads(latent @ wcol(p["w_uk"]), n_heads, d_nope)
+    v = _split_heads(latent @ wcol(p["w_uv"]), n_heads, d_v)
+    q_nope = shard(q_nope, BATCH, None, "model", None)
+    # fold the shared rope key into per-head keys: MLA scores become standard
+    # MHA over concat(nope, rope) head dims -> reuse the chunked sdpa
+    q_c = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_c = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, d_rope))], axis=-1)
+    if s > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q_c, k_c, v, causal, None)
+    else:
+        mask = causal_mask(s) if causal else jnp.ones((1, 1, s, s), bool)
+        out = _sdpa(q_c, k_c, v, mask)
+    return out.reshape(b, s, n_heads * d_v) @ wrow(p["wo"])
+
+
+class MLACache(NamedTuple):
+    latent: jnp.ndarray     # (B, C, kv_lora)
+    k_rope: jnp.ndarray     # (B, C, d_rope)
+    pos: jnp.ndarray
+
+
+def mla_cache_init(batch, capacity, kv_lora, d_rope, dtype, prefill_len=0):
+    return MLACache(jnp.zeros((batch, capacity, kv_lora), dtype),
+                    jnp.zeros((batch, capacity, d_rope), dtype),
+                    jnp.asarray(prefill_len, jnp.int32))
+
+
+def mla_decode(p, x, cache: MLACache, n_heads, kv_lora, d_nope, d_rope, d_v, *,
+               rope_theta=10000.0):
+    """Absorbed-matrix MLA decode: attention runs in the latent space."""
+    b = x.shape[0]
+    cap = cache.latent.shape[1]
+    pos = cache.pos
+    q = _split_heads(x @ wcol(p["wq"]), n_heads, d_nope + d_rope)  # (B,1,H,*)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    pq = pos[None, None].astype(jnp.float32) * jnp.ones((b, 1))
+    q_rope = apply_rope(q_rope, pq, rope_theta)
+    latent_t = rmsnorm(p["kv_norm"], x @ p["w_dkv"])          # (B,1,kvl)
+    k_rope_t = apply_rope((x @ p["w_kr"])[:, :, None, :], pq, rope_theta)[:, :, 0]
+    new_lat = jax.lax.dynamic_update_slice_in_dim(cache.latent, latent_t, pos, 1)
+    new_kr = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope_t, pos, 1)
+    w_uk = p["w_uk"].reshape(kv_lora, n_heads, d_nope)
+    q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, w_uk)        # absorb W_uk
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, new_lat)
+              + jnp.einsum("bshd,btd->bhst", q_rope, new_kr))
+    scores = scores / jnp.sqrt(d_nope + d_rope).astype(x.dtype)
+    valid = (jnp.arange(cap) <= pos)[None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    att = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", att, new_lat)        # (B,1,H,kvl)
+    w_uv = p["w_uv"].reshape(kv_lora, n_heads, d_v)
+    out = jnp.einsum("bshl,lhv->bshv", o_lat, w_uv)
+    out = out.reshape(b, 1, n_heads * d_v) @ wrow(p["wo"])
+    return out, MLACache(new_lat, new_kr, pos + 1)
+
+
+# ---------------------------------------------------------------- cross attn
+def cross_attn_init(key, d_model, n_heads, n_kv, d_head, dtype=jnp.float32):
+    return gqa_init(key, d_model, n_heads, n_kv, d_head, dtype)
+
+
+def cross_attn(p, x, enc_kv, n_heads, n_kv, d_head):
+    """x: (B,S,D) queries over precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    q = _split_heads(x @ wcol(p["wq"]), n_heads, d_head)
+    k, v = enc_kv
+    t = k.shape[1]
+    mask = jnp.ones((1, 1, s, t), bool)
+    out = _sdpa(q, k, v, mask)
+    return out.reshape(b, s, n_heads * d_head) @ wrow(p["wo"])
+
+
+def cross_kv(p, enc_out, n_kv, d_head):
+    k = _split_heads(enc_out @ wcol(p["wk"]), n_kv, d_head)
+    v = _split_heads(enc_out @ wcol(p["wv"]), n_kv, d_head)
+    return k, v

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer: top-k router, shared experts, capacity dispatch.
+
+TPU-native design: tokens are sorted by assigned expert and packed into a
+static (E, C) slot grid (capacity-based, MaxText-style), so expert compute is
+one batched einsum that the 'model' mesh axis shards over experts. Dropped
+tokens (over capacity) fall back to the shared-expert/residual path, matching
+standard capacity-factor semantics. A load-balance auxiliary loss (Switch-
+style) is returned for the training objective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import BATCH, dense_init, shard, swiglu, swiglu_init
+
+
+def _wexp(w):
+    """Expert weights at use: ('model' on E, rest gathered from FSDP)."""
+    return shard(w, "model", None, None)
+
+
+def moe_init(key, d_model, d_ff_expert, n_experts, n_shared, d_ff_shared,
+             dtype=jnp.float32):
+    k_router, k_e, k_s = jax.random.split(key, 3)
+    ke = jax.random.split(k_e, 3)
+    scale = (2.0 / (d_model + d_ff_expert)) ** 0.5
+    p = {
+        "router": dense_init(k_router, d_model, n_experts, scale=0.02, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ke[0], (n_experts, d_model, d_ff_expert)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ke[1], (n_experts, d_model, d_ff_expert)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ke[2], (n_experts, d_ff_expert, d_model)) * scale).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared"] = swiglu_init(k_s, d_model, d_ff_shared, dtype)
+    return p
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jnp.ndarray       # Switch load-balance loss
+    dropped_frac: jnp.ndarray   # fraction of (token, k) routes over capacity
+
+
+def moe_apply(p, x, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+              router_dtype=jnp.float32):
+    """x: (B, S, D) -> (y, MoEStats). Capacity C = ceil(T*k/E * factor)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(router_dtype) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)       # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)     # renormalize top-k
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(expert_ids[:, 0], n_experts, dtype=router_dtype)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch into a static (E, C) slot grid
+    cap = int(max(1, -(-t * top_k // n_experts) * capacity_factor))
+    flat_expert = expert_ids.reshape(-1)                       # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)                           # stable in jnp
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert group
+    first = jnp.searchsorted(se, jnp.arange(n_experts))        # group starts
+    pos_in_e = jnp.arange(t * top_k) - first[se]
+    keep = pos_in_e < cap
+    # over-capacity routes go out of bounds and are dropped by mode="drop"
+    slot = jnp.where(keep, se * cap + pos_in_e, n_experts * cap)  # (T*k,)
+
+    # scatter token ids (+1, 0 = empty) into slots
+    slot_token = jnp.zeros((n_experts * cap,), jnp.int32)
+    slot_gate = jnp.zeros((n_experts * cap,), x.dtype)
+    slot_token = slot_token.at[slot].set(st + 1, mode="drop")
+    slot_gate = slot_gate.at[slot].set(sg.astype(x.dtype), mode="drop")
+    gathered = xt[jnp.maximum(slot_token - 1, 0)]              # (E*C, D)
+    gathered = gathered * (slot_token > 0)[:, None].astype(x.dtype)
+    xe = gathered.reshape(n_experts, cap, d)
+    # experts over 'model', CAPACITY over 'data': without the data sharding
+    # every data rank replicates the full expert matmuls (measured 16x
+    # overcompute on deepseek-v2 train_4k — §Perf bonus iteration)
+    xe = shard(xe, "model", "data", None)
+
+    # ---- expert computation (SwiGLU), sharded over experts x capacity
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, _wexp(p["w_gate"])))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, _wexp(p["w_up"]))
+    h = shard(h, "model", "data", None)
+    ye = jnp.einsum("ecf,efd->ecd", h,
+                    _wexp(p["w_down"])).reshape(n_experts * cap, d)
+
+    # ---- weighted scatter back to tokens
+    y = jnp.zeros((t, d), x.dtype)
+    y = y.at[jnp.maximum(slot_token - 1, 0)].add(ye * slot_gate[:, None],
+                                                 mode="drop")
+    y = y.reshape(b, s, d)
+    y = shard(y, BATCH, None, None)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x)
+
+    dropped = 1.0 - jnp.sum(keep.astype(jnp.float32)) / (t * top_k)
+    return y, MoEStats(aux.astype(jnp.float32), dropped)

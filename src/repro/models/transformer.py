@@ -1,0 +1,705 @@
+"""Architecture zoo assembly: decoder LMs (dense/MoE/SSM/hybrid), enc-dec,
+and the GLASU vertical-split transformer (the paper's technique as a
+first-class backbone feature).
+
+Design rules:
+  * every homogeneous layer stack is a ``lax.scan`` over stacked weights
+    (keeps HLO O(1 layer) so 80 CPU dry-run compiles stay tractable);
+  * decode paths scan the same stacks over stacked per-layer caches;
+  * all client/shard-crossing points carry explicit sharding constraints.
+
+GLASU-split mode (cfg.glasu): the hidden dimension is vertically partitioned
+into M feature shards ("clients" on the 'model' mesh axis). Every
+``sync_every``-th layer consumes the *gathered* full hidden state (concat
+aggregation — one all-gather); all other layers are block-diagonal per client
+and collective-free. This is the paper's lazy aggregation transplanted to a
+transformer: K = L / sync_every aggregation layers out of L. Stale updates
+(Q) are realized in the training step, which caches sync-layer activations
+from the first microstep and replaces the collective in the remaining Q-1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (BATCH, dense_init, embed_init, gelu_mlp, gelu_mlp_init,
+                     rmsnorm, rmsnorm_init, shard, shard_seq, swiglu,
+                     swiglu_init, wcol, wrow)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# =====================================================================
+# Block initializers (single layer; stacks are vmapped over layer keys)
+# =====================================================================
+def _init_attn(key, cfg: ArchConfig):
+    if cfg.attn == "mla":
+        return attn.mla_init(key, cfg.d_model, cfg.n_heads, cfg.kv_lora,
+                             cfg.d_nope, cfg.d_rope, cfg.d_head, _dtype(cfg))
+    return attn.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                         _dtype(cfg))
+
+
+def _init_dense_block(key, cfg: ArchConfig, use_moe: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"attn_norm": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+         "attn": _init_attn(k1, cfg),
+         "mlp_norm": rmsnorm_init(cfg.d_model, _dtype(cfg))}
+    if use_moe:
+        p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.d_ff_expert,
+                                    cfg.n_experts, cfg.n_shared_experts,
+                                    cfg.d_ff_expert * cfg.n_shared_experts,
+                                    _dtype(cfg))
+    else:
+        p["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, _dtype(cfg))
+    return p
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# =====================================================================
+# Dense / MoE decoder block (prefill + decode)
+# =====================================================================
+def _attn_prefill(p, x, cfg: ArchConfig, causal=True, window=None):
+    if cfg.attn == "mla":
+        return attn.mla_prefill(p, x, cfg.n_heads, cfg.kv_lora, cfg.d_nope,
+                                cfg.d_rope, cfg.d_head, causal=causal,
+                                rope_theta=cfg.rope_theta)
+    return attn.gqa_prefill(p, x, cfg.n_heads, cfg.n_kv, cfg.d_head,
+                            causal=causal, window=window,
+                            rope_theta=cfg.rope_theta, use_flash=cfg.use_flash)
+
+
+def dense_block(p, x, cfg: ArchConfig, use_moe: bool, window=None):
+    x = shard_seq(x)
+    attn_out = _attn_prefill(p["attn"], rmsnorm(p["attn_norm"], x), cfg,
+                             window=window)
+    x = x + attn_out
+    x = shard_seq(x)
+    h = rmsnorm(p["mlp_norm"], x)
+    if use_moe:
+        y, stats = moe_lib.moe_apply(p["moe"], h, cfg.n_experts, cfg.top_k,
+                                     cfg.capacity_factor)
+        aux = stats.aux_loss
+    else:
+        y, aux = swiglu(p["mlp"], h), jnp.zeros((), jnp.float32)
+    y = x + y
+    return shard_seq(y), aux
+
+
+def dense_block_decode(p, x, cache, cfg: ArchConfig, use_moe: bool, ring: bool):
+    h = rmsnorm(p["attn_norm"], x)
+    if cfg.attn == "mla":
+        attn_out, cache = attn.mla_decode(p["attn"], h, cache, cfg.n_heads,
+                                          cfg.kv_lora, cfg.d_nope, cfg.d_rope,
+                                          cfg.d_head, rope_theta=cfg.rope_theta)
+    else:
+        attn_out, cache = attn.gqa_decode(p["attn"], h, cache, cfg.n_heads,
+                                          cfg.n_kv, cfg.d_head, ring=ring,
+                                          rope_theta=cfg.rope_theta)
+    x = x + attn_out
+    h = rmsnorm(p["mlp_norm"], x)
+    if use_moe:
+        y, _ = moe_lib.moe_apply(p["moe"], h, cfg.n_experts, cfg.top_k,
+                                 cfg.capacity_factor)
+    else:
+        y = swiglu(p["mlp"], h)
+    return x + y, cache
+
+
+# =====================================================================
+# SSM blocks
+# =====================================================================
+def _init_mamba_block(key, cfg: ArchConfig):
+    k1, _ = jax.random.split(key)
+    return {"norm": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "mamba": ssm_lib.mamba2_init(k1, cfg.d_model, cfg.d_state,
+                                         cfg.ssm_heads, cfg.ssm_head_dim,
+                                         dtype=_dtype(cfg))}
+
+
+def mamba_block(p, x, cfg: ArchConfig):
+    x = shard_seq(x)
+    y = ssm_lib.mamba2_forward(p["mamba"], rmsnorm(p["norm"], x), cfg.d_state,
+                               cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_chunk)
+    return shard_seq(x + y)
+
+
+def mamba_block_decode(p, x, cache, cfg: ArchConfig):
+    y, cache = ssm_lib.mamba2_decode(p["mamba"], rmsnorm(p["norm"], x), cache,
+                                     cfg.d_state, cfg.ssm_heads, cfg.ssm_head_dim)
+    return x + y, cache
+
+
+def _init_rwkv_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"tm_norm": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "time_mix": ssm_lib.rwkv6_init(k1, cfg.d_model, cfg.ssm_heads,
+                                           cfg.ssm_head_dim, dtype=_dtype(cfg)),
+            "cm_norm": rmsnorm_init(cfg.d_model, _dtype(cfg)),
+            "chan_mix": ssm_lib.rwkv6_channel_mix_init(k2, cfg.d_model, cfg.d_ff,
+                                                       _dtype(cfg))}
+
+
+def rwkv_block(p, x, cfg: ArchConfig):
+    x = shard_seq(x)
+    x = x + ssm_lib.rwkv6_forward(p["time_mix"], rmsnorm(p["tm_norm"], x),
+                                  cfg.ssm_heads, cfg.ssm_head_dim)
+    x = x + ssm_lib.rwkv6_channel_mix(p["chan_mix"], rmsnorm(p["cm_norm"], x))
+    return shard_seq(x)
+
+
+class RWKVBlockCache(NamedTuple):
+    time_mix: ssm_lib.RWKV6Cache
+    cm_x_prev: jnp.ndarray
+
+
+def rwkv_block_decode(p, x, cache: RWKVBlockCache, cfg: ArchConfig):
+    y, tm = ssm_lib.rwkv6_decode(p["time_mix"], rmsnorm(p["tm_norm"], x), cache.time_mix,
+                                 cfg.ssm_heads, cfg.ssm_head_dim)
+    x = x + y
+    h = rmsnorm(p["cm_norm"], x)
+    y = ssm_lib.rwkv6_channel_mix(p["chan_mix"], h, cache.cm_x_prev)
+    return x + y, RWKVBlockCache(tm, h[:, 0])
+
+
+# =====================================================================
+# Model init
+# =====================================================================
+def init_lm(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    params: Dict[str, Any] = {
+        "emb": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+        "unemb": dense_init(ks[1], cfg.d_model, cfg.vocab, dtype=dt),
+    }
+    if cfg.glasu is not None:
+        return _init_glasu_lm(params, ks, cfg)
+    if cfg.is_encdec:
+        params["enc"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg, False), ks[2], cfg.enc_layers)
+        params["dec"] = _stack_init(
+            lambda k: {**_init_dense_block(k, cfg, False),
+                       "xattn_norm": rmsnorm_init(cfg.d_model, dt),
+                       "xattn": attn.cross_attn_init(
+                           jax.random.fold_in(k, 7), cfg.d_model, cfg.n_heads,
+                           cfg.n_kv, cfg.d_head, dt)},
+            ks[3], cfg.dec_layers)
+        return params
+    if cfg.block == "mamba2":
+        n_groups = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        leftover = cfg.n_layers - n_groups * cfg.attn_every
+        if cfg.attn_every:
+            params["ssm_groups"] = _stack_init(
+                lambda k: _stack_init(lambda kk: _init_mamba_block(kk, cfg),
+                                      k, cfg.attn_every), ks[2], n_groups)
+            params["shared_attn"] = _init_dense_block(ks[3], cfg, False)
+        if leftover or not cfg.attn_every:
+            n = leftover if cfg.attn_every else cfg.n_layers
+            params["ssm_tail"] = _stack_init(
+                lambda k: _init_mamba_block(k, cfg), ks[4], n)
+        return params
+    if cfg.block == "rwkv6":
+        params["blocks"] = _stack_init(lambda k: _init_rwkv_block(k, cfg),
+                                       ks[2], cfg.n_layers)
+        return params
+    # dense / moe decoder
+    n_moe_layers = cfg.n_layers - cfg.n_dense_layers
+    if cfg.n_dense_layers:
+        params["dense_head"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg, False), ks[2], cfg.n_dense_layers)
+    params["blocks"] = _stack_init(
+        lambda k: _init_dense_block(k, cfg, cfg.moe), ks[3], n_moe_layers)
+    return params
+
+
+# =====================================================================
+# Forward (train / prefill)
+# =====================================================================
+def _best_group(n: int) -> int:
+    """Largest divisor of n not exceeding sqrt(n) (nested-remat group count)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def _scan_stack(block_fn, stacked_params, x, remat: bool):
+    """Scan a homogeneous layer stack with sqrt(L) nested rematerialization.
+
+    Plain scan-of-checkpointed-blocks saves an (L, B, S, D) residual stack;
+    two-level scan (outer groups checkpointed, inner layers checkpointed)
+    saves (G + L/G) residuals instead — the classic sqrt-remat trade, worth
+    ~10x activation memory at L=126 (llama3-405b).
+    """
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(carry, p):
+        out = fn(p, carry)
+        if isinstance(out, tuple) and len(out) == 2:
+            return out[0], out[1]
+        if isinstance(out, tuple):
+            out = out[0]
+        return out, jnp.zeros((), jnp.float32)
+
+    n_layers = jax.tree.leaves(stacked_params)[0].shape[0]
+    groups = _best_group(n_layers) if remat else 1
+    if groups <= 1:
+        x, aux = jax.lax.scan(body, x, stacked_params)
+        return x, jnp.sum(aux)
+
+    regrouped = jax.tree.map(
+        lambda v: v.reshape(groups, n_layers // groups, *v.shape[1:]),
+        stacked_params)
+
+    @jax.checkpoint
+    def group_body(carry, gp):
+        out, aux = jax.lax.scan(body, carry, gp)
+        return out, jnp.sum(aux)
+
+    x, aux = jax.lax.scan(group_body, x, regrouped)
+    return x, jnp.sum(aux)
+
+
+def lm_forward(params, cfg: ArchConfig, tokens=None, embeds=None,
+               src_embeds=None, window=None, return_hidden=False):
+    """Returns (logits, aux_loss) — or (hidden, aux_loss) with
+    ``return_hidden`` so the caller can run a memory-chunked loss head.
+    Inputs: tokens (B, S) and/or prefix ``embeds`` (B, P, D) for VLM/audio
+    stubs; ``src_embeds`` for encoder-decoder source side.
+    """
+    window = window if window is not None else cfg.sliding_window
+    pieces = []
+    if embeds is not None:
+        pieces.append(embeds.astype(_dtype(cfg)))
+    if tokens is not None:
+        pieces.append(shard(params["emb"], "model", None)[tokens])
+    x = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=1)
+    x = shard(x, BATCH, None, None)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.glasu is not None:
+        x, aux_total, _ = _glasu_trunk(params, x, cfg, window)
+    elif cfg.is_encdec:
+        enc = src_embeds.astype(_dtype(cfg))
+        enc = shard(enc, BATCH, None, None)
+        enc, _ = _scan_stack(lambda p, h: (dense_block_bidir(p, h, cfg),),
+                             params["enc"], enc, cfg.remat)
+        enc = rmsnorm(params["final_norm"], enc)
+
+        def dec_block(p, h):
+            out, aux = dense_block(p, h, cfg, False, window)
+            kv = attn.cross_kv(p["xattn"], enc, cfg.n_kv, cfg.d_head)
+            out = out + attn.cross_attn(p["xattn"],
+                                        rmsnorm(p["xattn_norm"], out), kv,
+                                        cfg.n_heads, cfg.n_kv, cfg.d_head)
+            return out, aux
+
+        x, aux_total = _scan_stack(dec_block, params["dec"], x, cfg.remat)
+    elif cfg.block == "mamba2":
+        x = _zamba_trunk_prefill(params, x, cfg, window)
+    elif cfg.block == "rwkv6":
+        x, _ = _scan_stack(lambda p, h: (rwkv_block(p, h, cfg),),
+                           params["blocks"], x, cfg.remat)
+    else:
+        if cfg.n_dense_layers:
+            x, _ = _scan_stack(lambda p, h: dense_block(p, h, cfg, False, window),
+                               params["dense_head"], x, cfg.remat)
+        x, aux_total = _scan_stack(lambda p, h: dense_block(p, h, cfg, cfg.moe, window),
+                                   params["blocks"], x, cfg.remat)
+
+    x = rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    logits = x @ wcol(params["unemb"])
+    logits = shard(logits, BATCH, None, "model")
+    return logits, aux_total
+
+
+def dense_block_bidir(p, x, cfg: ArchConfig):
+    h = _attn_prefill(p["attn"], rmsnorm(p["attn_norm"], x), cfg, causal=False)
+    x = x + h
+    return x + swiglu(p["mlp"], rmsnorm(p["mlp_norm"], x))
+
+
+def _zamba_trunk_prefill(params, x, cfg: ArchConfig, window):
+    if "ssm_groups" in params:
+        n_groups = params["ssm_groups"]["norm"]["g"].shape[0]
+
+        def group_fn(h, gp):
+            h, _ = _scan_stack(lambda p, hh: (mamba_block(p, hh, cfg),),
+                               gp, h, cfg.remat)
+            h, _ = dense_block(params["shared_attn"], h, cfg, False, window)
+            return h, None
+
+        x, _ = jax.lax.scan(group_fn, x, params["ssm_groups"])
+    if "ssm_tail" in params:
+        x, _ = _scan_stack(lambda p, h: (mamba_block(p, h, cfg),),
+                           params["ssm_tail"], x, cfg.remat)
+    return x
+
+
+# =====================================================================
+# Decode (serve_step): one token through stacked caches
+# =====================================================================
+def init_caches(cfg: ArchConfig, batch: int, seq_len: int, prefill_len: int = 0):
+    """Stacked per-layer decode caches sized for ``seq_len`` context.
+
+    Sliding-window archs get a ring buffer of size ``window`` instead of the
+    full context — the long_500k memory story.
+    """
+    dt = _dtype(cfg)
+    cap = seq_len
+    ring = False
+    if cfg.sliding_window and seq_len > cfg.sliding_window:
+        cap, ring = cfg.sliding_window, True
+
+    def kv(n):
+        return jax.vmap(lambda _: attn.kv_cache_init(
+            batch, cap, cfg.n_kv, cfg.d_head, dt, prefill_len))(jnp.arange(n))
+
+    if cfg.glasu is not None:
+        return {"kv": kv(cfg.n_layers)}
+    if cfg.is_encdec:
+        return {"self": kv(cfg.dec_layers)}
+    if cfg.block == "mamba2":
+        conv_ch = cfg.ssm_heads * cfg.ssm_head_dim + 2 * cfg.d_state
+        caches = {}
+        if cfg.attn_every:
+            n_groups = cfg.n_layers // cfg.attn_every
+            caches["ssm_groups"] = jax.vmap(lambda _: jax.vmap(
+                lambda __: ssm_lib.mamba2_cache_init(
+                    batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state,
+                    conv_ch, dtype=dt))(jnp.arange(cfg.attn_every)))(
+                jnp.arange(n_groups))
+            caches["shared_attn"] = kv(n_groups)
+            leftover = cfg.n_layers - n_groups * cfg.attn_every
+        else:
+            leftover = cfg.n_layers
+        if leftover:
+            caches["ssm_tail"] = jax.vmap(lambda _: ssm_lib.mamba2_cache_init(
+                batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_state, conv_ch,
+                dtype=dt))(jnp.arange(leftover))
+        return caches
+    if cfg.block == "rwkv6":
+        return {"blocks": jax.vmap(lambda _: RWKVBlockCache(
+            ssm_lib.rwkv6_cache_init(batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                     cfg.d_model, dt),
+            jnp.zeros((batch, cfg.d_model), dt)))(jnp.arange(cfg.n_layers))}
+    caches = {}
+    if cfg.attn == "mla":
+        caches["blocks"] = jax.vmap(lambda _: attn.mla_cache_init(
+            batch, cap, cfg.kv_lora, cfg.d_rope, dt, prefill_len))(
+            jnp.arange(cfg.n_layers - cfg.n_dense_layers))
+        if cfg.n_dense_layers:
+            caches["dense_head"] = jax.vmap(lambda _: attn.mla_cache_init(
+                batch, cap, cfg.kv_lora, cfg.d_rope, dt, prefill_len))(
+                jnp.arange(cfg.n_dense_layers))
+    else:
+        caches["blocks"] = kv(cfg.n_layers - cfg.n_dense_layers)
+        if cfg.n_dense_layers:
+            caches["dense_head"] = kv(cfg.n_dense_layers)
+    return caches
+
+
+def _uses_ring(cfg: ArchConfig, caches) -> bool:
+    """Static ring-buffer flag, derived from the cache capacity (a shape)."""
+    if cfg.sliding_window is None:
+        return False
+    for key in ("kv", "self", "blocks", "shared_attn"):
+        c = caches.get(key)
+        if isinstance(c, attn.KVCache):
+            return c.k.shape[2] == cfg.sliding_window
+    return False
+
+
+def lm_decode_step(params, caches, cfg: ArchConfig, token, enc_out=None):
+    """One greedy decode step. token: (B, 1) int32 -> (next_token, caches)."""
+    x = shard(params["emb"], "model", None)[token]
+    ring = _uses_ring(cfg, caches)
+
+    if cfg.glasu is not None:
+        x, new_kv = _glasu_decode(params, x, caches["kv"], cfg, ring)
+        caches = {**caches, "kv": new_kv}
+    elif cfg.is_encdec:
+        def body(h, pc):
+            p, c = pc
+            out, nc = dense_block_decode(p, h, c, cfg, False, ring)
+            kvx = attn.cross_kv(p["xattn"], enc_out, cfg.n_kv, cfg.d_head)
+            out = out + attn.cross_attn(p["xattn"], rmsnorm(p["xattn_norm"], out),
+                                        kvx, cfg.n_heads, cfg.n_kv, cfg.d_head)
+            return out, nc
+
+        x, new_self = jax.lax.scan(body, x, (params["dec"], caches["self"]))
+        caches = {**caches, "self": new_self}
+    elif cfg.block == "mamba2":
+        caches = dict(caches)
+        if "ssm_groups" in caches:
+            def group_body(h, inp):
+                gp, gc, ac = inp
+
+                def inner(hh, pc):
+                    p, c = pc
+                    return mamba_block_decode(p, hh, c, cfg)
+
+                h, ngc = jax.lax.scan(inner, h, (gp, gc))
+                h, nac = dense_block_decode(params["shared_attn"], h, ac, cfg,
+                                            False, ring)
+                return h, (ngc, nac)
+
+            x, (ngc, nac) = jax.lax.scan(
+                group_body, x, (params["ssm_groups"], caches["ssm_groups"],
+                                caches["shared_attn"]))
+            caches["ssm_groups"], caches["shared_attn"] = ngc, nac
+        if "ssm_tail" in caches:
+            def tail(h, pc):
+                p, c = pc
+                return mamba_block_decode(p, h, c, cfg)
+
+            x, nt = jax.lax.scan(tail, x, (params["ssm_tail"], caches["ssm_tail"]))
+            caches["ssm_tail"] = nt
+    elif cfg.block == "rwkv6":
+        def body(h, pc):
+            p, c = pc
+            return rwkv_block_decode(p, h, c, cfg)
+
+        x, nb = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+        caches = {**caches, "blocks": nb}
+    else:
+        caches = dict(caches)
+
+        def body(h, pc):
+            p, c = pc
+            return dense_block_decode(p, h, c, cfg, cfg.moe, ring)
+
+        if cfg.n_dense_layers:
+            def body_d(h, pc):
+                p, c = pc
+                return dense_block_decode(p, h, c, cfg, False, ring)
+
+            x, nd = jax.lax.scan(body_d, x, (params["dense_head"],
+                                             caches["dense_head"]))
+            caches["dense_head"] = nd
+        x, nb = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+        caches["blocks"] = nb
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = x @ wcol(params["unemb"])
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_token, caches
+
+
+# =====================================================================
+# GLASU vertical split (paper technique on a transformer backbone)
+# =====================================================================
+def _glasu_dims(cfg: ArchConfig):
+    g = cfg.glasu
+    m = g.n_clients
+    assert cfg.d_model % m == 0 and cfg.n_heads % m == 0
+    assert cfg.d_ff % m == 0 and max(cfg.n_kv, m) % min(cfg.n_kv, m) == 0
+    return m, cfg.d_model // m, cfg.n_heads // m, max(cfg.n_kv // m, 1), cfg.d_ff // m
+
+
+def _init_glasu_lm(params, ks, cfg: ArchConfig):
+    m, dm, hm, kvm, fm = _glasu_dims(cfg)
+    dt = _dtype(cfg)
+    g = cfg.glasu
+    n_groups = cfg.n_layers // g.sync_every
+
+    def init_sync(key):
+        # full-input layer: standard dense block (weights consume gathered D)
+        return _init_dense_block(key, cfg, False)
+
+    def init_local(key):
+        # block-diagonal client sub-layer: each client maps its d/M slice
+        def one(k):
+            k1, k2, k3, k4, k5, k6, k7 = jax.random.split(k, 7)
+            return {
+                "attn_norm": rmsnorm_init(dm, dt),
+                "wq": dense_init(k1, dm, hm * cfg.d_head, dtype=dt),
+                "wk": dense_init(k2, dm, kvm * cfg.d_head, dtype=dt),
+                "wv": dense_init(k3, dm, kvm * cfg.d_head, dtype=dt),
+                "wo": dense_init(k4, hm * cfg.d_head, dm, dtype=dt),
+                "mlp_norm": rmsnorm_init(dm, dt),
+                "w_gate": dense_init(k5, dm, fm, dtype=dt),
+                "w_up": dense_init(k6, dm, fm, dtype=dt),
+                "w_down": dense_init(k7, fm, dm, dtype=dt),
+            }
+        return jax.vmap(one)(jax.random.split(key, m))
+
+    def init_group(key):
+        k1, k2 = jax.random.split(key)
+        gp = {"sync": init_sync(k1)}
+        if g.sync_every > 1:
+            gp["locals"] = _stack_init(init_local, k2, g.sync_every - 1)
+        return gp
+
+    params["groups"] = _stack_init(init_group, ks[2], n_groups)
+    return params
+
+
+def _glasu_local_block(p, x_loc, cfg: ArchConfig, window, positions=None,
+                       cache=None, ring=False):
+    """Client-local (block-diagonal) layer. x_loc: (B, S, M, dm).
+
+    Attention runs independently inside each client's head group — zero
+    cross-client communication (the lazy-aggregation layers of the paper).
+    """
+    m, dm, hm, kvm, fm = _glasu_dims(cfg)
+    b, s = x_loc.shape[0], x_loc.shape[1]
+    h = rmsnorm_m(p["attn_norm"], x_loc)
+    q = jnp.einsum("bsmd,mdh->bsmh", h, p["wq"]).reshape(b, s, m, hm, cfg.d_head)
+    k = jnp.einsum("bsmd,mdh->bsmh", h, p["wk"]).reshape(b, s, m, kvm, cfg.d_head)
+    v = jnp.einsum("bsmd,mdh->bsmh", h, p["wv"]).reshape(b, s, m, kvm, cfg.d_head)
+    pos = positions if positions is not None else jnp.arange(s)[None]
+    q = attn.apply_rope(q.reshape(b, s, m * hm, cfg.d_head), pos, cfg.rope_theta)
+    k = attn.apply_rope(k.reshape(b, s, m * kvm, cfg.d_head), pos, cfg.rope_theta)
+    q = shard(q.reshape(b, s, m, hm, cfg.d_head), BATCH, None, "model", None, None)
+    k = shard(k.reshape(b, s, m, kvm, cfg.d_head), BATCH, None, "model", None, None)
+    if cache is not None:
+        kc, vc, cpos = cache
+        cap = kc.shape[1]
+        slot = (cpos % cap) if ring else jnp.minimum(cpos, cap - 1)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        idx = jnp.arange(cap)
+        valid = jnp.where(cpos >= cap, jnp.ones_like(idx, bool), idx <= cpos) \
+            if ring else (idx <= cpos)
+        mask = valid[None, None, None, :]
+        out = jax.vmap(attn._sdpa, in_axes=(2, 2, 2, None), out_axes=2)(
+            q, kc, vc, mask)
+        new_cache = (kc, vc, cpos + 1)
+    else:
+        if s > attn.CHUNK_THRESHOLD:
+            out = jax.vmap(
+                lambda qm, km, vm: attn._sdpa_chunked(qm, km, vm, True, window),
+                in_axes=(2, 2, 2), out_axes=2)(q, k, v)
+        else:
+            mask = attn.causal_mask(s, window=window)
+            out = jax.vmap(attn._sdpa, in_axes=(2, 2, 2, None), out_axes=2)(
+                q, k, v, mask)
+        new_cache = None
+    out = out.reshape(b, s, m, hm * cfg.d_head)
+    x_loc = x_loc + jnp.einsum("bsmh,mhd->bsmd", out, p["wo"])
+    h = rmsnorm_m(p["mlp_norm"], x_loc)
+    y = jax.nn.silu(jnp.einsum("bsmd,mdf->bsmf", h, p["w_gate"])) \
+        * jnp.einsum("bsmd,mdf->bsmf", h, p["w_up"])
+    y = shard(y, BATCH, None, "model", None)
+    x_loc = x_loc + jnp.einsum("bsmf,mfd->bsmd", y, p["w_down"])
+    return shard(x_loc, BATCH, None, "model", None), new_cache
+
+
+def rmsnorm_m(p, x, eps=1e-6):
+    """Per-client RMSNorm: p['g'] has shape (M, dm) or (dm,)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * p["g"]
+
+
+def _glasu_trunk(params, x, cfg: ArchConfig, window, collect_stale=False,
+                 stale=None):
+    """(B,S,D) -> (B,S,D). Sync layers gather; local layers stay sharded.
+
+    Groups are executed under a checkpointed ``lax.scan`` (63 unrolled groups
+    on llama3-405b cost 840 GB of live activations; scanned+remat ~20 GB).
+    With ``collect_stale`` the gathered sync inputs are stacked and returned
+    so the training loop can run Q-1 collective-free stale microsteps; with
+    ``stale`` given, the gather is REPLACED by the cached activations with
+    the live shard's slice refreshed (the paper's Extract/combine, Alg 4).
+    """
+    m, dm, hm, kvm, fm = _glasu_dims(cfg)
+    g = cfg.glasu
+    b, s, d = x.shape
+    x_loc = x.reshape(b, s, m, dm)
+    x_loc = shard(x_loc, BATCH, None, "model", None)
+    n_groups = cfg.n_layers // g.sync_every
+
+    def group_fn(carry, inp):
+        x_loc = carry
+        gp, stale_g = inp
+        if stale is not None:
+            full = _replace_own_shard(stale_g, x_loc, m)
+        else:
+            full = x_loc.reshape(b, s, d)
+            full = shard(full, BATCH, None, None)       # forces the all-gather
+        stale_out = full if collect_stale else jnp.zeros((), x.dtype)
+        full, aux = dense_block(gp["sync"], full, cfg, False, window)
+        x_loc = full.reshape(b, s, m, dm)
+        x_loc = shard(x_loc, BATCH, None, "model", None)
+        if g.sync_every > 1:
+            def local_body(c, lp):
+                out, _ = _glasu_local_block(lp, c, cfg, window)
+                return out, jnp.zeros((), jnp.float32)
+
+            x_loc, _ = jax.lax.scan(local_body, x_loc, gp["locals"])
+        return x_loc, (stale_out, aux)
+
+    fn = jax.checkpoint(group_fn) if cfg.remat else group_fn
+    if stale is not None:
+        xs = (params["groups"], stale)
+    else:
+        xs = (params["groups"],
+              jnp.zeros((n_groups,), x.dtype))          # dummy stale slots
+    x_loc, (stale_out, aux) = jax.lax.scan(fn, x_loc, xs)
+    x = x_loc.reshape(b, s, d)
+    return x, jnp.sum(aux), (stale_out if collect_stale else [])
+
+
+def _replace_own_shard(full, x_loc, m):
+    """Under SPMD each model-shard group refreshes its own slice of the
+    stale gathered activations; expressed globally as a reshape-merge."""
+    b, s, d = full.shape
+    dm = d // m
+    merged = full.reshape(b, s, m, dm)
+    # own (fresh) slice wins — globally this is simply x_loc, since every
+    # client's fresh slice is present exactly once
+    merged = x_loc
+    return shard(merged.reshape(b, s, d), BATCH, None, None)
+
+
+def _glasu_decode(params, x, kv_caches, cfg: ArchConfig, ring):
+    m, dm, hm, kvm, fm = _glasu_dims(cfg)
+    g = cfg.glasu
+    b = x.shape[0]
+    n_groups = cfg.n_layers // g.sync_every
+    x_loc = x.reshape(b, 1, m, dm)
+    new_k, new_v, new_pos = [], [], []
+    li = 0
+    for gi in range(n_groups):
+        gp = jax.tree.map(lambda v: v[gi], params["groups"])
+        full = x_loc.reshape(b, 1, cfg.d_model)
+        c = jax.tree.map(lambda v: v[li], kv_caches)
+        full, nc = dense_block_decode(gp["sync"], full, c, cfg, False, ring)
+        new_k.append(nc.k), new_v.append(nc.v), new_pos.append(nc.pos)
+        li += 1
+        x_loc = full.reshape(b, 1, m, dm)
+        for lj in range(g.sync_every - 1):
+            lp = jax.tree.map(lambda v: v[lj], gp["locals"])
+            c = jax.tree.map(lambda v: v[li], kv_caches)
+            # local cache: reuse KVCache with kv heads = m * kvm stored flat
+            kc = c.k.reshape(b, c.k.shape[1], m, kvm, cfg.d_head)
+            vc = c.v.reshape(b, c.v.shape[1], m, kvm, cfg.d_head)
+            pos = jnp.arange(1)[None] * 0 + c.pos
+            x_loc, (kc, vc, npos) = _glasu_local_block(
+                lp, x_loc, cfg, None, positions=pos.astype(jnp.float32),
+                cache=(kc, vc, c.pos), ring=ring)
+            new_k.append(kc.reshape(b, kc.shape[1], m * kvm, cfg.d_head))
+            new_v.append(vc.reshape(b, vc.shape[1], m * kvm, cfg.d_head))
+            new_pos.append(npos)
+            li += 1
+    caches = attn.KVCache(jnp.stack(new_k), jnp.stack(new_v), jnp.stack(new_pos))
+    return x_loc.reshape(b, 1, cfg.d_model), caches

@@ -1,0 +1,197 @@
+"""Pure-JAX optimizers (the container has no optax; the paper uses SGD).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+ScalarOrSchedule = Union[float, Schedule]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]
+
+
+def _lr(lr: ScalarOrSchedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ----------------------------------------------------------------- schedules
+def constant_schedule(v: float) -> Schedule:
+    return lambda step: jnp.asarray(v)
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def inverse_sqrt(peak: float, warmup: int) -> Schedule:
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(step / jnp.maximum(warmup, 1),
+                                  jnp.sqrt(jnp.maximum(warmup, 1) / jnp.maximum(step, 1)))
+    return sched
+
+
+# ---------------------------------------------------------------- optimizers
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr: ScalarOrSchedule, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(jnp.zeros([], jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _lr(lr, state.step)
+        if momentum:
+            new_mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: -eta * (momentum * m + g), new_mom, grads)
+            else:
+                upd = jax.tree.map(lambda m: -eta * m, new_mom)
+            return upd, SGDState(step, new_mom)
+        return jax.tree.map(lambda g: -eta * g, grads), SGDState(step, None)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when weight_decay > 0)."""
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(jnp.zeros([], jnp.int32), z,
+                         jax.tree.map(jnp.zeros_like, z))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _lr(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -eta * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - eta * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        if params is None:
+            upd = jax.tree.map(lambda m, v: u(m, v, None), mu, nu)
+        else:
+            upd = jax.tree.map(u, mu, nu, params)
+        return upd, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: ScalarOrSchedule, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    # accumulate in f32 via reduce dtype, but scale in the grad dtype —
+    # `g * f32_scalar` silently promotes every gradient buffer to f32
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g), dtype=jnp.float32)
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree.map(lambda g: (g * scale.astype(g.dtype)), grads), gnorm
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any     # factored second moment (rows)
+    vc: Any     # factored second moment (cols)
+    v: Any      # full second moment for <2D leaves
+
+
+def adafactor(lr: ScalarOrSchedule, eps: float = 1e-30,
+              clip_threshold: float = 1.0, decay: float = 0.8) -> Optimizer:
+    """Memory-factored Adam (T5X-style, beta1=0): O(rows+cols) second moment.
+
+    The production-scale configs (e.g. llama3-405b) use this so optimizer
+    state fits the per-chip HBM budget in the dry-run memory analysis.
+    """
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        vr = jax.tree.map(lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+                          if _factored(p) else jnp.zeros((), jnp.float32), params)
+        vc = jax.tree.map(lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                          if _factored(p) else jnp.zeros((), jnp.float32), params)
+        v = jax.tree.map(lambda p: jnp.zeros((), jnp.float32) if _factored(p)
+                         else jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdafactorState(jnp.zeros([], jnp.int32), vr, vc, v)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        eta = _lr(lr, state.step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, vr, vc, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if g.ndim >= 2:
+                nvr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                nvc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (nvr / jnp.maximum(jnp.mean(nvr, axis=-1, keepdims=True), eps)
+                         )[..., None] * nvc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                nv = v
+            else:
+                nv = beta2 * v + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(nv + eps)
+                nvr, nvc = vr, vc
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -eta * u, nvr, nvc, nv
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, state.v)
+        treedef = jax.tree.structure(grads)
+        flat = treedef.flatten_up_to(out)
+        updates = treedef.unflatten([o[0] for o in flat])
+        vr = treedef.unflatten([o[1] for o in flat])
+        vc = treedef.unflatten([o[2] for o in flat])
+        v = treedef.unflatten([o[3] for o in flat])
+        return updates, AdafactorState(step, vr, vc, v)
+
+    return Optimizer(init, update)

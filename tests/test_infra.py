@@ -1,0 +1,119 @@
+"""Infrastructure tests: checkpointing, sharding-spec inference, HLO walker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import checkpoint
+from repro.launch import hlo_cost
+
+
+# ------------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)),
+                             jnp.bfloat16),
+            "b": jnp.arange(5, dtype=jnp.int32),
+            "nested": {"s": jnp.asarray(3.5, jnp.float32)}}
+    checkpoint.save(str(tmp_path), 7, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    back = checkpoint.restore(str(tmp_path), tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_cleanup(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(5):
+        checkpoint.save(str(tmp_path), s, tree)
+    checkpoint.cleanup(str(tmp_path), keep=2)
+    import glob
+    assert len(glob.glob(str(tmp_path / "ckpt_*.npz"))) == 2
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+
+
+# -------------------------------------------------------- sharding inference
+def test_param_specs_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shd
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    # stand-in leaves (ShapeDtypeStruct is enough for the rule engine)
+    sds = jax.ShapeDtypeStruct
+    params = {
+        "emb": sds((1024, 64), jnp.float32),
+        "blocks": {"attn": {"wq": sds((8, 64, 128), jnp.float32),
+                            "wo": sds((8, 128, 64), jnp.float32)},
+                   "moe": {"w_gate": sds((8, 4, 64, 32), jnp.float32),
+                           "router": sds((64, 4), jnp.float32)}},
+        "final_norm": {"g": sds((64,), jnp.float32)},
+    }
+    specs = shd.param_specs(params, mesh)
+    # mesh axes have size 1 -> guard strips everything to None; use a fake
+    # 4-device mesh shape instead via the internal rule function
+    raw = jax.tree_util.tree_map_with_path(
+        lambda p, l: shd._leaf_spec(p, l, FakeMesh()), params)
+    # small leaves: pure TP rules, no FSDP (below the 16 MB threshold)
+    assert raw["emb"] == P("model", None)
+    assert raw["blocks"]["attn"]["wq"] == P(None, None, "model")
+    assert raw["blocks"]["attn"]["wo"] == P(None, "model", None)
+    assert raw["blocks"]["moe"]["w_gate"][1] == "model"   # expert axis
+    assert raw["blocks"]["moe"]["router"] == P(None, None)
+    assert raw["final_norm"]["g"] == P(None)
+    # large leaf: FSDP adds 'data' on the biggest free dim
+    big = jax.ShapeDtypeStruct((32, 8192, 8192), jnp.float32)
+    spec = shd._leaf_spec(
+        (jax.tree_util.DictKey("blocks"), jax.tree_util.DictKey("wq")),
+        big, FakeMesh())
+    assert spec == P(None, "data", "model")
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 2}
+
+
+def test_opt_state_specs_structural():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shd
+    from repro.optim import optimizers as opt_lib
+    params = {"w": jnp.zeros((8, 4)), "g": jnp.zeros((4,))}
+    pspecs = {"w": P("data", "model"), "g": P(None)}
+    for make in (lambda: opt_lib.adamw(1e-3), lambda: opt_lib.adafactor(1e-3),
+                 lambda: opt_lib.sgd(1e-3, momentum=0.9)):
+        opt = make()
+        state = jax.eval_shape(opt.init, params)
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        specs = shd.opt_state_specs(state, pspecs, mesh)
+        # structurally mappable onto the state (would raise otherwise)
+        jax.tree.flatten(specs)
+
+
+# ----------------------------------------------------------------- HLO walker
+def test_hlo_walker_counts_scan_trips():
+    def ten(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.zeros((128, 128))
+    r = hlo_cost.analyze(jax.jit(ten).lower(x).compile().as_text())
+    assert r["flops"] == pytest.approx(10 * 2 * 128 ** 3, rel=0.01)
+
+
+def test_hlo_walker_nested_and_collect_bytes():
+    def nested(x):
+        def outer(c, _):
+            def inner(cc, _):
+                return cc @ cc, None
+            y, _ = jax.lax.scan(inner, c, None, length=5)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jnp.zeros((64, 64))
+    r = hlo_cost.analyze(jax.jit(nested).lower(x).compile().as_text())
+    assert r["flops"] == pytest.approx(15 * 2 * 64 ** 3, rel=0.01)
+    assert r["hbm_bytes"] > 15 * 2 * 64 * 64 * 4  # at least the carrier traffic

@@ -1,0 +1,141 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis property tests,
+allclose against the pure-jnp oracles in kernels/ref.py (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.graph_agg import graph_agg_pallas
+
+
+# ------------------------------------------------------------------ graph_agg
+@pytest.mark.parametrize("n_src,n_dst,fanout,d,d_out", [
+    (64, 32, 4, 16, 8),
+    (300, 128, 4, 64, 32),
+    (512, 200, 8, 128, 64),     # non-multiple of 128 dst
+    (1000, 384, 3, 96, 48),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_graph_agg_matches_ref(n_src, n_dst, fanout, d, d_out, dtype):
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(n_src, d)), dtype)
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, fanout)), jnp.int32)
+    mask = jnp.asarray(rng.random((n_dst, fanout)) < 0.8, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, d_out)), dtype)
+    got = graph_agg_pallas(h, idx, mask, w, interpret=True)
+    want = ref.graph_agg_ref(h, idx, mask, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_src=st.integers(8, 200), n_dst=st.integers(1, 150),
+       fanout=st.integers(1, 6), d=st.sampled_from([8, 24, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_graph_agg_property(n_src, n_dst, fanout, d, seed):
+    """Property: all-masked rows give exactly zero; result is permutation-
+    equivariant in destination rows."""
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n_src, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, fanout)), jnp.int32)
+    mask = jnp.asarray(rng.random((n_dst, fanout)) < 0.7, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+    got = graph_agg_pallas(h, idx, mask, w, interpret=True)
+    want = ref.graph_agg_ref(h, idx, mask, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # all-masked row -> zero output
+    mask0 = mask.at[0].set(0.0)
+    got0 = graph_agg_pallas(h, idx, mask0, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got0[0]), 0.0, atol=1e-6)
+    # permutation equivariance
+    perm = rng.permutation(n_dst)
+    got_p = graph_agg_pallas(h, idx[perm], mask[perm], w, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(got)[perm],
+                               rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("b,s,t,h,kv,dh", [
+    (1, 128, 128, 4, 4, 32),      # MHA, single block
+    (2, 256, 256, 8, 2, 64),      # GQA 4:1, multi-block
+    (1, 200, 200, 4, 1, 64),      # MQA, ragged seq (padding path)
+    (2, 96, 320, 4, 2, 32),       # cross-length (t > s)
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(b, s, t, h, kv, dh, causal):
+    if causal and s != t:
+        pytest.skip("causal requires square for this ref")
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, kv, dh)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128, 511])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(2)
+    b, s, h, dh = 1, 512, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    b, s, h, dh = 1, 128, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(16, 257), h=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), dh=st.sampled_from([16, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_property(s, h, g, dh, seed):
+    """Property: rows of the attention matrix sum to 1 -> constant-v gives
+    constant output; causal first row attends only to itself."""
+    if h % g:
+        g = 1
+    kv = h // g
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, s, kv, dh)), jnp.float32)
+    v = jnp.ones((1, s, kv, dh), jnp.float32) * 3.25
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 3.25, rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrappers_jit():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    out = ops.flash_attention(q, q, q, causal=True)
+    assert out.shape == q.shape
+    h = jnp.asarray(rng.normal(size=(50, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 50, size=(20, 4)), jnp.int32)
+    mask = jnp.ones((20, 4), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    out = ops.graph_agg(h, idx, mask, w)
+    assert out.shape == (20, 8)

@@ -1,0 +1,169 @@
+"""Unit + property tests for the model substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import apply_rope
+from repro.optim import optimizers as opt_lib
+
+
+# -------------------------------------------------------------------- rope
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)), jnp.float32)
+    pos = jnp.arange(16)[None]
+    r = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<R(q,m), R(k,n)> depends only on m-n (per head dim pair)."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.array([[m]], jnp.float32))
+        kn = apply_rope(k, jnp.array([[n]], jnp.float32))
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+# --------------------------------------------------------------------- MoE
+def test_moe_no_drops_with_large_capacity():
+    rng = np.random.default_rng(2)
+    p = moe_lib.moe_init(jax.random.PRNGKey(0), 32, 64, 4, 0, 0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 32)), jnp.float32)
+    y, stats = moe_lib.moe_apply(p, x, 4, 2, capacity_factor=8.0)
+    assert y.shape == x.shape
+    assert float(stats.dropped_frac) == 0.0
+    assert np.isfinite(float(stats.aux_loss))
+
+
+def test_moe_capacity_drops_counted():
+    rng = np.random.default_rng(3)
+    p = moe_lib.moe_init(jax.random.PRNGKey(1), 16, 32, 8, 0, 0)
+    x = jnp.asarray(rng.normal(size=(1, 64, 16)), jnp.float32)
+    # skewed router -> force collisions at tiny capacity
+    p["router"] = p["router"] * 0.0 + jnp.eye(16, 8) * 10.0
+    y, stats = moe_lib.moe_apply(p, x, 8, 2, capacity_factor=0.25)
+    assert float(stats.dropped_frac) > 0.0
+
+
+def test_moe_gradients_flow_to_all_parts():
+    rng = np.random.default_rng(4)
+    p = moe_lib.moe_init(jax.random.PRNGKey(2), 16, 32, 4, 1, 32)
+
+    def loss(p, x):
+        y, stats = moe_lib.moe_apply(p, x, 4, 2, capacity_factor=4.0)
+        return jnp.sum(y ** 2) + 0.01 * stats.aux_loss
+
+    x = jnp.asarray(rng.normal(size=(1, 32, 16)), jnp.float32)
+    g = jax.grad(loss)(p, x)
+    for name in ("router", "w_gate", "w_down", "shared"):
+        leaves = jax.tree.leaves(g[name])
+        assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(4, 40), e=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 1000))
+def test_moe_is_weighted_average_of_expert_outputs(t, e, k, seed):
+    """With no drops, output == sum_k gate_k * expert_k(x) per token."""
+    if k > e:
+        k = e
+    d, f = 8, 16
+    rng = np.random.default_rng(seed)
+    p = moe_lib.moe_init(jax.random.PRNGKey(seed), d, f, e, 0, 0)
+    x = jnp.asarray(rng.normal(size=(1, t, d)), jnp.float32)
+    y, stats = moe_lib.moe_apply(p, x, e, k, capacity_factor=float(e * 2))
+    assert float(stats.dropped_frac) == 0.0
+
+    # dense reference
+    logits = x.reshape(t, d) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, ei = jax.lax.top_k(probs, k)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    xt = x.reshape(t, d)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["w_gate"])) \
+        * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", h, p["w_down"])   # (t, e, d)
+    want = jnp.zeros((t, d))
+    for kk in range(k):
+        want = want + gv[:, kk, None] * jnp.take_along_axis(
+            all_out, ei[:, kk, None, None].repeat(d, -1), axis=1)[:, 0]
+    np.testing.assert_allclose(np.asarray(y.reshape(t, d)), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- Mamba2
+def test_ssd_chunk_scan_matches_naive_recurrence():
+    """Chunked SSD == step-by-step h' = exp(dt a) h + dt B x; y = C h."""
+    b, s, h, p, n = 1, 16, 2, 4, 3
+    rng = np.random.default_rng(5)
+    xh = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.5, size=(b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 1.5, size=(h,)), jnp.float32)
+
+    got = ssm_lib._ssd_chunk_scan(xh, bm, cm, dt, a, chunk=4)
+
+    state = np.zeros((b, h, p, n), np.float32)
+    want = np.zeros((b, s, h, p), np.float32)
+    for t in range(s):
+        dec = np.exp(np.asarray(dt[:, t]) * np.asarray(a))      # (b, h)
+        upd = np.einsum("bhp,bn,bh->bhpn", xh[:, t], bm[:, t], dt[:, t])
+        state = state * dec[:, :, None, None] + upd
+        want[:, t] = np.einsum("bhpn,bn->bhp", state, cm[:, t])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("make", [
+    lambda: opt_lib.sgd(0.1), lambda: opt_lib.sgd(0.1, momentum=0.9),
+    lambda: opt_lib.adam(0.1), lambda: opt_lib.adamw(0.1),
+    lambda: opt_lib.adafactor(0.5),
+])
+def test_optimizers_minimize_quadratic(make):
+    opt = make()
+    params = {"w": jnp.asarray(np.ones((4, 3)), jnp.float32),
+              "b": jnp.ones((3,), jnp.float32)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = opt_lib.apply_updates(params, upd)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_clip_by_global_norm_preserves_dtype_and_norm():
+    g = {"a": jnp.ones((8, 8), jnp.bfloat16) * 10}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert clipped["a"].dtype == jnp.bfloat16
+    total = float(jnp.sqrt(jnp.sum(jnp.square(
+        clipped["a"].astype(jnp.float32)))))
+    assert total <= 1.05
+
+
+def test_schedules():
+    s = opt_lib.linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < 0.01
+    inv = opt_lib.inverse_sqrt(1.0, 16)
+    assert abs(float(inv(16)) - 1.0) < 1e-6
+    assert float(inv(64)) == pytest.approx(0.5, rel=1e-3)
