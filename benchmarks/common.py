@@ -6,6 +6,10 @@ Method registry reproduces §5.2's compared algorithms:
   sim      — simulated centralized [9]: K=L, Q=1
   glasu1   — GLASU, K=L/2 uniform, Q=1
   glasu4   — GLASU, K=L/2 uniform, Q=4
+
+Each method maps onto one ``ExperimentConfig`` run through the unified
+``api.Trainer`` — the method name picks the aggregation schedule, client
+count, and eval mode.
 """
 from __future__ import annotations
 
@@ -13,10 +17,16 @@ import time
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.glasu import GlasuConfig
-from repro.core.train import TrainConfig, make_centralized_dataset, train_glasu
-from repro.graph.sampler import SamplerConfig
-from repro.graph.synth import make_vfl_dataset
+from repro.api import ExperimentConfig, Trainer
+from repro.api import agg_layers_for_k  # noqa: F401 (re-export for callers)
+
+_METHOD_MAP = {
+    "cent": "centralized",
+    "stal": "standalone",
+    "sim": "simulated-centralized",
+    "glasu": "glasu",
+    "fedbcd": "fedbcd",
+}
 
 
 @dataclass
@@ -32,55 +42,26 @@ class BenchSettings:
     size_cap: int = 384
 
 
-def agg_layers_for_k(n_layers: int, k: int):
-    """Paper's 'uniform' placement: K=1 -> last; K=2 -> middle+last; K=L -> all."""
-    if k >= n_layers:
-        return tuple(range(n_layers))
-    step = n_layers // k
-    return tuple(sorted({n_layers - 1 - i * step for i in range(k)}))
-
-
 def run_method(method: str, dataset_name: str, n_clients: int = 3,
                seed: int = 0, s: BenchSettings = BenchSettings(),
                k: Optional[int] = None, q: int = 1,
-               target_acc: Optional[float] = None, rounds: Optional[int] = None):
-    data = make_vfl_dataset(dataset_name, n_clients=n_clients, seed=seed)
-    rounds = rounds or s.rounds
-    if method == "cent":
-        data = make_centralized_dataset(data)
-        n_clients = 1
-    if method == "stal":
-        agg = ()
-        eval_mode = "per_client"
-    else:
-        if k is None:
-            k = s.n_layers if method == "sim" else max(s.n_layers // 2, 1)
-        agg = agg_layers_for_k(s.n_layers, k)
-        eval_mode = "ensemble"
-    if method == "sim":
-        q = 1
-    d_in = max(c.feat_dim for c in data.clients)
-    mcfg = GlasuConfig(
+               target_acc: Optional[float] = None, rounds: Optional[int] = None,
+               backend: str = "vmapped"):
+    api_method = _METHOD_MAP[method]
+    if api_method == "simulated-centralized":
+        k, q = None, 1          # Q=1 is part of the method's definition
+    elif api_method == "standalone":
+        k = None                # no aggregation schedule, but Q is honored
+    cfg = ExperimentConfig(
+        name=f"bench-{dataset_name}-{method}", dataset=dataset_name,
+        method=api_method, backend=backend,
         n_clients=n_clients, n_layers=s.n_layers, hidden=s.hidden,
-        n_classes=data.n_classes, d_in=d_in, backbone=s.backbone,
-        agg_layers=agg, n_local_steps=q)
-    # standalone still needs a batch sampler; sharedness only at S[L]
-    scfg = SamplerConfig(n_layers=s.n_layers,
-                         agg_layers=agg if agg else (s.n_layers - 1,),
-                         batch_size=s.batch_size, fanout=s.fanout,
-                         size_cap=s.size_cap)
-    if not agg:
-        scfg = SamplerConfig(n_layers=s.n_layers, agg_layers=(s.n_layers - 1,),
-                             batch_size=s.batch_size, fanout=s.fanout,
-                             size_cap=s.size_cap)
-        mcfg = GlasuConfig(
-            n_clients=n_clients, n_layers=s.n_layers, hidden=s.hidden,
-            n_classes=data.n_classes, d_in=d_in, backbone=s.backbone,
-            agg_layers=(), n_local_steps=q)
-    tcfg = TrainConfig(rounds=rounds, lr=s.lr, eval_every=s.eval_every,
-                       seed=seed, eval_mode=eval_mode)
+        backbone=s.backbone, k=k, n_local_steps=q,
+        batch_size=s.batch_size, fanout=s.fanout, size_cap=s.size_cap,
+        rounds=rounds or s.rounds, lr=s.lr, eval_every=s.eval_every,
+        seed=seed, target_acc=target_acc)
     t0 = time.perf_counter()
-    res = train_glasu(data, mcfg, scfg, tcfg, target_acc=target_acc)
+    res = Trainer(cfg).run()
     res.wall_seconds = time.perf_counter() - t0
     return res
 

@@ -1,28 +1,31 @@
 """Quickstart: train a GLASU split-GCNII on the Cora proxy in ~1 minute.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The whole experiment is one preset from the unified API — the 5-line version:
+
+    from repro.api import Trainer, get_preset
+
+    cfg = get_preset("cora-gcnii-glasu").with_(rounds=60, eval_every=20)
+    result = Trainer(cfg).run()
+    print(result.test_acc, result.comm_bytes)
+
+``get_preset`` names every paper scenario (``<dataset>-<backbone>-<method>``,
+45 combinations — see ``repro.api.list_presets()``); ``with_`` overrides any
+field with validation; ``Trainer`` derives the model/sampler configs from the
+dataset, runs the hook pipeline (periodic exact eval, comm metering, optional
+early stop + checkpointing), and returns a ``TrainResult``. Swap
+``backend="simulation"`` to run the identical round as explicit client/server
+messages with a byte-audited log.
 """
-from repro.core.glasu import GlasuConfig
-from repro.core.train import TrainConfig, train_glasu
-from repro.graph.sampler import SamplerConfig
-from repro.graph.synth import make_vfl_dataset
+from repro.api import Trainer, get_preset
 
 
 def main():
-    data = make_vfl_dataset("cora", n_clients=3, seed=0)
-    d_in = max(c.feat_dim for c in data.clients)
-
-    model_cfg = GlasuConfig(
-        n_clients=3, n_layers=4, hidden=64, n_classes=data.n_classes,
-        d_in=d_in, backbone="gcnii",
-        agg_layers=(1, 3),       # lazy aggregation: K=2 of L=4 layers
-        n_local_steps=4,         # stale updates: Q=4
-    )
-    sampler_cfg = SamplerConfig(n_layers=4, agg_layers=(1, 3), batch_size=16,
-                                fanout=3)
-    res = train_glasu(data, model_cfg, sampler_cfg,
-                      TrainConfig(rounds=60, lr=0.01, eval_every=20))
-    print(f"\nGLASU (K=2, Q=4) on cora-proxy:")
+    cfg = get_preset("cora-gcnii-glasu").with_(rounds=60, eval_every=20)
+    res = Trainer(cfg).run()
+    print(f"\nGLASU (K={len(cfg.agg_layers)}, Q={cfg.n_local_steps}) "
+          f"on {cfg.dataset}-proxy:")
     print(f"  test accuracy   : {res.test_acc * 100:.1f}%")
     print(f"  communication   : {res.comm_bytes / 1e6:.1f} MB "
           f"({res.rounds_run} rounds)")

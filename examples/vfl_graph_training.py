@@ -1,19 +1,20 @@
 """End-to-end driver (paper's task): full VFL training run comparing GLASU
 against the paper's baselines on one dataset, with privacy hooks enabled.
 
+Every scenario is one ``ExperimentConfig`` — the method (centralized /
+standalone / simulated-centralized / glasu) picks the aggregation schedule,
+client count, and eval mode; no hand-assembled config triples.
+
     PYTHONPATH=src python examples/vfl_graph_training.py [--dataset suzhou]
 """
 import argparse
 
-from repro.core.glasu import GlasuConfig
-from repro.core.train import TrainConfig, make_centralized_dataset, train_glasu
-from repro.graph.sampler import SamplerConfig
-from repro.graph.synth import make_vfl_dataset
+from repro.api import ExperimentConfig, Trainer
 
 
-def run(name, data, mcfg, scfg, tcfg):
-    res = train_glasu(data, mcfg, scfg, tcfg)
-    print(f"{name:28s} acc={res.test_acc * 100:5.1f}%  "
+def run(label, cfg):
+    res = Trainer(cfg).run()
+    print(f"{label:28s} acc={res.test_acc * 100:5.1f}%  "
           f"comm={res.comm_bytes / 1e6:8.1f}MB  t={res.wall_seconds:5.1f}s")
     return res
 
@@ -24,42 +25,20 @@ def main():
     ap.add_argument("--rounds", type=int, default=150)
     args = ap.parse_args()
 
-    data = make_vfl_dataset(args.dataset, n_clients=3, seed=0)
-    d_in = max(c.feat_dim for c in data.clients)
-    base = dict(n_clients=3, n_layers=4, hidden=64, n_classes=data.n_classes,
-                d_in=d_in, backbone="gcnii")
-    tcfg = TrainConfig(rounds=args.rounds, lr=0.01, eval_every=30)
-    s = dict(n_layers=4, batch_size=16, fanout=3)
+    base = ExperimentConfig(
+        name=f"{args.dataset}-comparison", dataset=args.dataset,
+        n_clients=3, n_layers=4, hidden=64, backbone="gcnii",
+        rounds=args.rounds, lr=0.01, eval_every=30)
 
     print(f"== {args.dataset} (3 clients, vertically partitioned) ==")
-    # centralized upper bound
-    cdata = make_centralized_dataset(data)
-    run("centralized (M=1)", cdata,
-        GlasuConfig(**{**base, "n_clients": 1, "d_in": cdata.full.feat_dim,
-                       "agg_layers": (1, 3)}),
-        SamplerConfig(agg_layers=(1, 3), **s), tcfg)
-    # standalone lower bound
-    run("standalone (no comm)", data,
-        GlasuConfig(**{**base, "agg_layers": ()}),
-        SamplerConfig(agg_layers=(3,), **s),
-        TrainConfig(rounds=args.rounds, lr=0.01, eval_every=30,
-                    eval_mode="per_client"))
-    # simulated centralized (K=L)
-    run("simulated-centralized K=4", data,
-        GlasuConfig(**{**base, "agg_layers": (0, 1, 2, 3)}),
-        SamplerConfig(agg_layers=(0, 1, 2, 3), **s), tcfg)
-    # GLASU
-    run("GLASU K=2 Q=1", data,
-        GlasuConfig(**{**base, "agg_layers": (1, 3)}),
-        SamplerConfig(agg_layers=(1, 3), **s), tcfg)
-    run("GLASU K=2 Q=4", data,
-        GlasuConfig(**{**base, "agg_layers": (1, 3), "n_local_steps": 4}),
-        SamplerConfig(agg_layers=(1, 3), **s), tcfg)
+    run("centralized (M=1)", base.with_(method="centralized"))
+    run("standalone (no comm)", base.with_(method="standalone"))
+    run("simulated-centralized K=4", base.with_(method="simulated-centralized"))
+    run("GLASU K=2 Q=1", base)
+    run("GLASU K=2 Q=4", base.with_(n_local_steps=4))
     # GLASU + privacy hooks (§3.6)
-    run("GLASU + secure-agg + DP", data,
-        GlasuConfig(**{**base, "agg_layers": (1, 3), "n_local_steps": 4,
-                       "secure_agg": True, "dp_sigma": 0.05}),
-        SamplerConfig(agg_layers=(1, 3), **s), tcfg)
+    run("GLASU + secure-agg + DP", base.with_(n_local_steps=4,
+                                              secure_agg=True, dp_sigma=0.05))
 
 
 if __name__ == "__main__":

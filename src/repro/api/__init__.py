@@ -1,0 +1,18 @@
+"""Unified experiment API: one config surface, pluggable backends, hooks.
+
+    from repro.api import Trainer, get_preset
+    result = Trainer(get_preset("cora-gcnii-glasu").with_(rounds=60)).run()
+"""
+from .backends import (Backend, RoundResult, SimulationBackend,
+                       VmappedBackend, make_backend)
+from .config import ExperimentConfig, agg_layers_for_k
+from .presets import get_preset, list_presets, register_preset
+from .trainer import (CheckpointHook, CommMeterHook, EarlyStopHook, EvalHook,
+                      Hook, Trainer, TrainerState)
+
+__all__ = [
+    "Backend", "RoundResult", "SimulationBackend", "VmappedBackend",
+    "make_backend", "ExperimentConfig", "agg_layers_for_k", "get_preset",
+    "list_presets", "register_preset", "CheckpointHook", "CommMeterHook",
+    "EarlyStopHook", "EvalHook", "Hook", "Trainer", "TrainerState",
+]

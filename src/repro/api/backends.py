@@ -1,0 +1,122 @@
+"""Pluggable execution backends: same Trainer, swappable substrate.
+
+``VmappedBackend`` is the fast path — clients are a stacked leading axis and
+one jitted round function (``core.glasu.make_round_fn``) advances all of them
+at once; communication is *metered* analytically via the sampler's cost
+model. ``SimulationBackend`` replays the identical round as literal
+client/server messages (``fed.simulation``) — the deployment topology of the
+paper's Fig. 1 — and *audits* the analytic meter against the message log
+every round: a divergence raises instead of silently mis-reporting bytes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Protocol, runtime_checkable
+
+from ..core import glasu
+from ..core.glasu import GlasuConfig
+from ..fed import simulation
+from ..graph.sampler import GlasuSampler, SampledBatch
+from ..optim import optimizers as opt_lib
+
+
+@dataclass
+class RoundResult:
+    """Output of one GLASU round, backend-independent."""
+    params: Any
+    opt_state: Any
+    losses: Any                                   # (Q,) per-microstep losses
+    comm_bytes: int                               # bytes this round
+    message_log: Optional[simulation.MessageLog] = None
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Execution substrate for one GLASU round (Alg 1 body)."""
+
+    name: str
+
+    def bind(self, model_cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+             sampler: GlasuSampler) -> None:
+        """Specialize to a model/optimizer/sampler before the first round."""
+        ...
+
+    def run_round(self, params, opt_state, batch: SampledBatch,
+                  key) -> RoundResult:
+        ...
+
+    def joint_logits(self, params, batch: SampledBatch, key=None):
+        """JointInference logits (M, S, C) — the cross-backend parity probe."""
+        ...
+
+
+def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler) -> int:
+    """Paper §3.2/§3.4 cost model; zero when nothing actually crosses clients."""
+    if cfg.agg_layers and cfg.n_clients > 1:
+        return sampler.comm_bytes_per_joint_inference(cfg.hidden, cfg.agg)
+    return 0
+
+
+class VmappedBackend:
+    """Stacked-axis fast path: one jitted round_fn, analytic byte meter."""
+
+    name = "vmapped"
+
+    def bind(self, model_cfg, optimizer, sampler):
+        self.cfg = model_cfg
+        self.round_fn = glasu.make_round_fn(model_cfg, optimizer)
+        self.bytes_per_round = _analytic_bytes(model_cfg, sampler)
+
+    def run_round(self, params, opt_state, batch, key):
+        params, opt_state, losses = self.round_fn(params, opt_state, batch,
+                                                  key)
+        return RoundResult(params, opt_state, losses, self.bytes_per_round)
+
+    def joint_logits(self, params, batch, key=None):
+        logits, _ = glasu.joint_inference(params, batch, self.cfg, key)
+        return logits
+
+
+class SimulationBackend:
+    """Explicit message-passing path; audits the meter against the log."""
+
+    name = "simulation"
+
+    def bind(self, model_cfg, optimizer, sampler):
+        if model_cfg.agg != "mean":
+            raise ValueError("SimulationBackend implements mean aggregation "
+                             "only")
+        if model_cfg.secure_agg or model_cfg.dp_sigma > 0.0:
+            raise ValueError("SimulationBackend does not implement the §3.6 "
+                             "privacy hooks")
+        self.cfg = model_cfg
+        self.optimizer = optimizer
+        self.bytes_per_round = _analytic_bytes(model_cfg, sampler)
+
+    def run_round(self, params, opt_state, batch, key):
+        params, opt_state, losses, log = simulation.simulate_round(
+            params, opt_state, batch, self.cfg, self.optimizer)
+        measured = log.total_bytes()
+        if self.cfg.n_clients > 1 and self.cfg.agg_layers \
+                and measured != self.bytes_per_round:
+            raise RuntimeError(
+                f"byte-meter audit failed: message log carries {measured} B "
+                f"but the sampler cost model predicts {self.bytes_per_round} B")
+        comm = measured if self.cfg.n_clients > 1 else 0
+        return RoundResult(params, opt_state, losses, comm, message_log=log)
+
+    def joint_logits(self, params, batch, key=None):
+        logits, _ = simulation.simulate_joint_inference(params, batch,
+                                                        self.cfg)
+        return logits
+
+
+_BACKENDS = {"vmapped": VmappedBackend, "simulation": SimulationBackend}
+
+
+def make_backend(name: str) -> Backend:
+    try:
+        return _BACKENDS[name]()
+    except KeyError:
+        raise ValueError(f"unknown backend {name!r}; expected one of "
+                         f"{tuple(_BACKENDS)}") from None

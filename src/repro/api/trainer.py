@@ -1,0 +1,260 @@
+"""Hook-driven training loop replacing the monolithic ``train_glasu``.
+
+The ``Trainer`` owns the dataset binding, the host-side sampler, and the
+round loop; everything episodic — periodic exact evaluation, early stopping
+at a target accuracy (paper Table 4), communication metering, checkpoint
+save/restore — is a ``Hook``. Default hooks reproduce the seed driver's
+behavior exactly; callers append their own for logging, sweeps, etc.
+
+    cfg = get_preset("cora-gcnii-glasu")
+    result = Trainer(cfg).run()
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import checkpoint, glasu
+from ..core.train import TrainResult, _eval_tables, make_centralized_dataset
+from ..graph.sampler import GlasuSampler
+from ..graph.synth import make_vfl_dataset
+from .backends import Backend, make_backend
+from .config import ExperimentConfig
+
+
+@dataclass
+class TrainerState:
+    """Mutable run state shared with hooks."""
+    params: Any = None
+    opt_state: Any = None
+    round: int = 0
+    comm_bytes: int = 0
+    history: List[Dict] = field(default_factory=list)
+    val_acc: float = 0.0
+    test_acc: float = 0.0
+    should_stop: bool = False
+    t0: float = 0.0
+    wall_seconds: float = 0.0
+    last_losses: Any = None
+
+
+class Hook:
+    """Override any subset; hooks run in registration order."""
+
+    def on_train_start(self, trainer: "Trainer"):
+        pass
+
+    def on_round_end(self, trainer: "Trainer", metrics: Dict):
+        pass
+
+    def on_eval(self, trainer: "Trainer", entry: Dict):
+        pass
+
+    def on_train_end(self, trainer: "Trainer"):
+        pass
+
+
+class CommMeterHook(Hook):
+    """Accumulates the backend's per-round byte count into the run state."""
+
+    def on_round_end(self, trainer, metrics):
+        trainer.state.comm_bytes += metrics["comm_bytes_round"]
+
+
+class EvalHook(Hook):
+    """Periodic exact full-graph evaluation + best-checkpoint bookkeeping.
+
+    Appends a history entry every ``eval_every`` rounds (and at the final
+    round) and dispatches ``on_eval`` to every hook — early stopping and
+    user hooks key off those entries.
+    """
+
+    def on_train_start(self, trainer):
+        cfg, data = trainer.cfg, trainer.data
+        feats, nbr_idx, nbr_mask = _eval_tables(
+            data, cfg.eval_table_cap, cfg.seed)
+        mcfg = trainer.model_cfg
+        self.eval_fn = jax.jit(lambda p: glasu.full_forward(
+            p, mcfg, feats, nbr_idx, nbr_mask,
+            chunk=min(4096, data.n_nodes)))
+
+    def on_round_end(self, trainer, metrics):
+        cfg, st = trainer.cfg, trainer.state
+        if st.round % cfg.eval_every != 0 and st.round != cfg.rounds:
+            return
+        data = trainer.data
+        logits = self.eval_fn(st.params)
+        mode = cfg.resolved_eval_mode
+        val = float(glasu.accuracy_from_logits(
+            logits, data.full.labels, data.full.val_idx, mode))
+        test = float(glasu.accuracy_from_logits(
+            logits, data.full.labels, data.full.test_idx, mode))
+        entry = {"round": st.round, "loss": float(st.last_losses[-1]),
+                 "val_acc": val, "test_acc": test,
+                 "comm_bytes": st.comm_bytes,
+                 "seconds": time.perf_counter() - st.t0}
+        st.history.append(entry)
+        if val >= st.val_acc:
+            st.val_acc, st.test_acc = val, test
+        for h in trainer.hooks:
+            h.on_eval(trainer, entry)
+
+
+class EarlyStopHook(Hook):
+    """Stop once validation accuracy reaches ``target_acc`` (paper Table 4)."""
+
+    def __init__(self, target_acc: float):
+        self.target_acc = target_acc
+
+    def on_eval(self, trainer, entry):
+        if entry["val_acc"] >= self.target_acc:
+            trainer.state.should_stop = True
+
+
+class CheckpointHook(Hook):
+    """Save/restore (params, opt_state, round, comm_bytes) via core.checkpoint.
+
+    The experiment config is written alongside as ``experiment.json``; on
+    resume everything that shapes the state must round-trip equal —
+    restoring under a different model/optimizer config is an error, not a
+    silent shape mismatch. Loop-schedule fields (rounds, eval cadence,
+    early-stop target, ...) may change between resumes.
+    """
+
+    RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
+                      "target_acc", "ckpt_every", "ckpt_dir")
+
+    def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+
+    def _tree(self, st: TrainerState):
+        return {"params": st.params, "opt_state": st.opt_state}
+
+    def _sidecar(self, step: int):
+        import pathlib
+        return pathlib.Path(self.ckpt_dir) / f"state_{step:08d}.json"
+
+    def on_train_start(self, trainer):
+        import pathlib
+        st = trainer.state
+        meta = pathlib.Path(self.ckpt_dir) / "experiment.json"
+        step = checkpoint.latest_step(self.ckpt_dir)
+        if step is not None:
+            if meta.exists():
+                saved = ExperimentConfig.from_dict(
+                    json.loads(meta.read_text())).to_dict()
+                here = trainer.cfg.to_dict()
+                for k in self.RESUME_MUTABLE:
+                    saved.pop(k, None)
+                    here.pop(k, None)
+                if saved != here:
+                    diff = sorted(k for k in here if saved.get(k) != here[k])
+                    raise ValueError(
+                        f"checkpoint in {self.ckpt_dir} was written by a "
+                        f"different experiment config (fields {diff})")
+            tree = checkpoint.restore(self.ckpt_dir, self._tree(st), step)
+            st.params = tree["params"]
+            st.opt_state = tree["opt_state"]
+            st.round = step
+            loop = json.loads(self._sidecar(step).read_text())
+            st.comm_bytes = loop["comm_bytes"]
+            st.val_acc, st.test_acc = loop["val_acc"], loop["test_acc"]
+            st.history = loop["history"]
+        else:
+            pathlib.Path(self.ckpt_dir).mkdir(parents=True, exist_ok=True)
+            meta.write_text(json.dumps(trainer.cfg.to_dict(), indent=1))
+
+    def _save(self, trainer):
+        import pathlib
+        st = trainer.state
+        checkpoint.save(self.ckpt_dir, st.round, self._tree(st))
+        self._sidecar(st.round).write_text(json.dumps(
+            {"comm_bytes": st.comm_bytes, "val_acc": st.val_acc,
+             "test_acc": st.test_acc, "history": st.history}))
+        checkpoint.cleanup(self.ckpt_dir, keep=self.keep)
+        live = {int(f.stem.split("_")[1])
+                for f in pathlib.Path(self.ckpt_dir).glob("ckpt_*.npz")}
+        for f in pathlib.Path(self.ckpt_dir).glob("state_*.json"):
+            if int(f.stem.split("_")[1]) not in live:
+                f.unlink()
+
+    def on_round_end(self, trainer, metrics):
+        if self.every and trainer.state.round % self.every == 0:
+            self._save(trainer)
+
+    def on_train_end(self, trainer):
+        if trainer.state.round > 0:
+            self._save(trainer)
+
+
+class Trainer:
+    """Run one experiment: dataset binding + backend + hook pipeline."""
+
+    def __init__(self, cfg: ExperimentConfig, data=None,
+                 backend: Optional[Backend] = None,
+                 hooks: Sequence[Hook] = ()):
+        self.cfg = cfg
+        self.data = data if data is not None else self._make_data(cfg)
+        self.model_cfg = cfg.glasu_config(self.data)
+        self.sampler = GlasuSampler(self.data, cfg.sampler_config(),
+                                    seed=cfg.seed)
+        self.optimizer = cfg.make_optimizer()
+        self.backend = backend if backend is not None \
+            else make_backend(cfg.backend)
+        self.backend.bind(self.model_cfg, self.optimizer, self.sampler)
+        self.hooks: List[Hook] = [CommMeterHook(), EvalHook()]
+        if cfg.target_acc is not None:
+            self.hooks.append(EarlyStopHook(cfg.target_acc))
+        if cfg.ckpt_dir is not None:
+            self.hooks.append(CheckpointHook(cfg.ckpt_dir, cfg.ckpt_every))
+        self.hooks.extend(hooks)
+        self.state = TrainerState()
+
+    @staticmethod
+    def _make_data(cfg: ExperimentConfig):
+        data = make_vfl_dataset(cfg.dataset, n_clients=cfg.n_clients,
+                                seed=cfg.seed)
+        if cfg.method == "centralized":
+            data = make_centralized_dataset(data)
+        return data
+
+    def run(self) -> TrainResult:
+        cfg, st = self.cfg, self.state
+        key = jax.random.PRNGKey(cfg.seed)
+        st.params = glasu.init_params(key, self.model_cfg)
+        st.opt_state = self.optimizer.init(st.params)
+        st.t0 = time.perf_counter()
+        for h in self.hooks:
+            h.on_train_start(self)          # CheckpointHook may fast-forward
+        for _ in range(st.round):
+            # replay the consumed sampler stream so a resumed run sees the
+            # same batch sequence as an uninterrupted one
+            self.sampler.sample_round()
+        for t in range(st.round, cfg.rounds):
+            batch = jax.tree.map(jnp.asarray, self.sampler.sample_round())
+            out = self.backend.run_round(st.params, st.opt_state, batch,
+                                         jax.random.fold_in(key, t))
+            st.params, st.opt_state = out.params, out.opt_state
+            st.last_losses = out.losses
+            st.round = t + 1
+            metrics = {"round": st.round, "losses": out.losses,
+                       "comm_bytes_round": out.comm_bytes,
+                       "message_log": out.message_log}
+            for h in self.hooks:
+                h.on_round_end(self, metrics)
+            if st.should_stop:
+                break
+        st.wall_seconds = time.perf_counter() - st.t0
+        for h in self.hooks:
+            h.on_train_end(self)
+        return TrainResult(
+            test_acc=st.test_acc, val_acc=st.val_acc, history=st.history,
+            comm_bytes=st.comm_bytes, rounds_run=st.round,
+            wall_seconds=st.wall_seconds, params=st.params)

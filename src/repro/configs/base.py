@@ -155,7 +155,10 @@ ARCH_IDS = [
     "rwkv6_7b", "llama3_405b", "yi_34b", "granite_20b",
 ]
 
-# Paper's own GNN configs live beside the transformer zoo.
+# Paper's own GNN configs live beside the transformer zoo. Each id is a real
+# module whose CONFIG is an ``repro.api.config.ExperimentConfig`` (the GNN
+# experiments are full scenarios, not bare architectures); resolve them with
+# ``get_gnn_arch`` / ``get_gnn_reduced``.
 GNN_ARCH_IDS = ["glasu_gcnii", "glasu_gcn", "glasu_gat"]
 
 
@@ -163,6 +166,23 @@ def get_arch(arch_id: str) -> ArchConfig:
     arch_id = arch_id.replace("-", "_").replace(".", "p")
     mod = importlib.import_module(f"repro.configs.{arch_id}")
     return mod.CONFIG
+
+
+def _gnn_module(arch_id: str):
+    if arch_id not in GNN_ARCH_IDS:
+        raise ValueError(f"unknown GNN arch {arch_id!r}; expected one of "
+                         f"{GNN_ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def get_gnn_arch(arch_id: str):
+    """Resolve a GNN_ARCH_IDS entry to its ExperimentConfig."""
+    return _gnn_module(arch_id).CONFIG
+
+
+def get_gnn_reduced(arch_id: str):
+    """CPU smoke-test variant of a GNN_ARCH_IDS entry."""
+    return _gnn_module(arch_id).reduced()
 
 
 def get_reduced(arch_id: str) -> ArchConfig:

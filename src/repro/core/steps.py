@@ -30,11 +30,14 @@ class TrainState(NamedTuple):
 
 
 def make_optimizer(cfg: ArchConfig) -> opt_lib.Optimizer:
-    if cfg.optimizer == "adafactor":
-        return opt_lib.adafactor(cfg.lr)
-    if cfg.optimizer == "sgd":
-        return opt_lib.sgd(cfg.lr, momentum=0.9)
-    return opt_lib.adamw(cfg.lr)
+    """Deprecated shim — the single factory lives in repro.optim.optimizers.
+
+    The transformer zoo historically spelled momentum-SGD as 'sgd' and fell
+    back to adamw; normalize the name accordingly.
+    """
+    name = {"adafactor": "adafactor", "sgd": "momentum"}.get(
+        cfg.optimizer, "adamw")
+    return opt_lib.make_optimizer(name, cfg.lr)
 
 
 def cross_entropy(logits, labels, vocab: int):

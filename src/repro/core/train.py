@@ -1,22 +1,20 @@
-"""GLASU training driver (paper Alg 1) with communication accounting.
+"""Legacy GLASU training surface (paper Alg 1) — now a shim.
 
-The driver owns the host-side sampler, the jitted round function, periodic
-exact full-graph evaluation, and the byte meter that implements the paper's
-communication cost model (uploads + broadcasts at aggregation layers, index
-sync — §3.2/§3.4: saving factor QL/K vs per-layer-per-iteration baselines).
+``TrainConfig``/``TrainResult`` remain the stable result types; the loop
+itself lives in ``repro.api.trainer.Trainer`` (hook-driven: periodic exact
+eval, early stopping, comm metering per §3.2/§3.4, checkpointing), and
+``train_glasu`` adapts the seed's three-config call sites onto it.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..graph.graph import VFLDataset
-from ..graph.sampler import GlasuSampler, SamplerConfig
+from ..graph.sampler import SamplerConfig
 from ..optim import optimizers as opt_lib
 from . import glasu
 
@@ -59,61 +57,32 @@ def _eval_tables(data: VFLDataset, cap: int, seed: int):
 
 
 def make_optimizer(cfg: TrainConfig) -> opt_lib.Optimizer:
-    if cfg.optimizer == "sgd":
-        return opt_lib.sgd(cfg.lr)
-    if cfg.optimizer == "momentum":
-        return opt_lib.sgd(cfg.lr, momentum=0.9)
-    return opt_lib.adam(cfg.lr)
+    """Deprecated shim — the single factory lives in repro.optim.optimizers.
+
+    Preserves the historical behavior exactly: this driver only ever knew
+    sgd/momentum/adam, and every other name fell back to adam.
+    """
+    name = cfg.optimizer if cfg.optimizer in ("sgd", "momentum", "adam") \
+        else "adam"
+    return opt_lib.make_optimizer(name, cfg.lr)
 
 
 def train_glasu(data: VFLDataset, model_cfg: glasu.GlasuConfig,
                 sampler_cfg: SamplerConfig, train_cfg: TrainConfig,
                 target_acc: Optional[float] = None) -> TrainResult:
-    """Run T rounds of Alg 1; optionally stop at a target accuracy (Table 4)."""
-    assert model_cfg.n_clients == data.n_clients
-    sampler = GlasuSampler(data, sampler_cfg, seed=train_cfg.seed)
-    optimizer = make_optimizer(train_cfg)
-    key = jax.random.PRNGKey(train_cfg.seed)
-    params = glasu.init_params(key, model_cfg)
-    opt_state = optimizer.init(params)
-    round_fn = glasu.make_round_fn(model_cfg, optimizer)
+    """Run T rounds of Alg 1; optionally stop at a target accuracy (Table 4).
 
-    feats_full, nbr_idx, nbr_mask = _eval_tables(
-        data, train_cfg.eval_table_cap, train_cfg.seed)
-    eval_fn = jax.jit(lambda p: glasu.full_forward(
-        p, model_cfg, feats_full, nbr_idx, nbr_mask,
-        chunk=min(4096, data.n_nodes)))
-
-    bytes_per_round = (sampler.comm_bytes_per_joint_inference(
-        model_cfg.hidden, model_cfg.agg)
-        if model_cfg.agg_layers and data.n_clients > 1 else 0)
-
-    result = TrainResult(0.0, 0.0)
-    t0 = time.perf_counter()
-    for t in range(train_cfg.rounds):
-        batch = sampler.sample_round()
-        batch = jax.tree.map(jnp.asarray, batch)
-        params, opt_state, losses = round_fn(params, opt_state, batch,
-                                             jax.random.fold_in(key, t))
-        result.comm_bytes += bytes_per_round
-        result.rounds_run = t + 1
-        if (t + 1) % train_cfg.eval_every == 0 or t == train_cfg.rounds - 1:
-            logits = eval_fn(params)
-            val = float(glasu.accuracy_from_logits(
-                logits, data.full.labels, data.full.val_idx, train_cfg.eval_mode))
-            test = float(glasu.accuracy_from_logits(
-                logits, data.full.labels, data.full.test_idx, train_cfg.eval_mode))
-            result.history.append({"round": t + 1, "loss": float(losses[-1]),
-                                   "val_acc": val, "test_acc": test,
-                                   "comm_bytes": result.comm_bytes,
-                                   "seconds": time.perf_counter() - t0})
-            if val >= result.val_acc:
-                result.val_acc, result.test_acc = val, test
-            if target_acc is not None and val >= target_acc:
-                break
-    result.wall_seconds = time.perf_counter() - t0
-    result.params = params
-    return result
+    Deprecated shim over the unified experiment API: adapts the three legacy
+    configs into one ``ExperimentConfig`` and delegates to ``api.Trainer``
+    (which reproduces this driver's sampling order, eval cadence, byte meter,
+    and best-val bookkeeping exactly). New code should build an
+    ``ExperimentConfig`` — or start from ``api.presets`` — directly.
+    """
+    from ..api import ExperimentConfig, Trainer
+    cfg = ExperimentConfig.from_legacy(model_cfg, sampler_cfg, train_cfg,
+                                       target_acc=target_acc,
+                                       dataset=data.name)
+    return Trainer(cfg, data=data).run()
 
 
 def make_centralized_dataset(data: VFLDataset) -> VFLDataset:

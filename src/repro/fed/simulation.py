@@ -44,15 +44,20 @@ class MessageLog:
                    if kind is None or m.kind == kind)
 
 
-def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig):
-    """Alg 3 with explicit messages. Returns (per-client logits, log).
+def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
+                             log: MessageLog = None,
+                             return_stale: bool = False):
+    """Alg 3 with explicit messages. Returns (per-client logits, log), or
+    (logits, stale, log) with ``return_stale=True`` where ``stale`` is the
+    Extract buffer dict {l: (M, n_{l+1}, h)} matching ``glasu.joint_inference``.
 
     Mean aggregation; per-client python loop (no vmap) so the computation is
     an independent implementation of the same algebra.
     """
     assert cfg.agg == "mean"
     m_clients = cfg.n_clients
-    log = MessageLog()
+    log = log if log is not None else MessageLog()
+    stale: Dict[int, Any] = {}
 
     h = []
     h0 = []
@@ -78,6 +83,9 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig):
             for m in range(m_clients):                 # broadcasts
                 log.send("server", f"client{m}", "broadcast", l, agg)
                 h[m] = agg
+            # Extract(H, H_m^+): the all-but-m buffer each client retains
+            stale[l] = jnp.stack([agg - h_plus[m] / m_clients
+                                  for m in range(m_clients)])
         else:
             for m in range(m_clients):
                 h[m] = h_plus[m]
@@ -86,4 +94,57 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig):
     for m in range(m_clients):
         pm = jax.tree.map(lambda v: v[m], params)
         logits.append(h[m] @ pm["cls"]["W"] + pm["cls"]["b"])
+    if return_stale:
+        return jnp.stack(logits), stale, log
     return jnp.stack(logits), log
+
+
+def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
+    """Replay Alg 2's index-set coordination as messages.
+
+    At every layer boundary ``j`` whose node set is shared — ``j == L`` (the
+    mini-batch) or ``j = l+1`` for an aggregation layer ``l`` — each client
+    uploads its candidate int32 index set and the server broadcasts the
+    padded union back. Sizes are read off the already-sampled batch so the
+    log is an exact audit of the sampler's cost model.
+    """
+    if not cfg.agg_layers:
+        return
+    sizes = {0: batch.feats.shape[1]}
+    for l in range(cfg.n_layers):
+        sizes[l + 1] = batch.gather_idx[l].shape[1]
+    idx_dtype = np.dtype(np.int32)
+    for j in range(cfg.n_layers + 1):
+        shared = j == cfg.n_layers or (j - 1) in cfg.agg_layers
+        if not shared:
+            continue
+        payload = np.zeros(sizes[j], idx_dtype)
+        for m in range(cfg.n_clients):
+            log.send(f"client{m}", "server", "index_sync", j, payload)
+            log.send("server", f"client{m}", "index_sync", j, payload)
+
+
+def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
+                   optimizer):
+    """One full GLASU round (Alg 1) over explicit messages.
+
+    JointInference runs message-by-message (plus the index-sync traffic of
+    Alg 2); the Q LocalUpdates are client-local by construction (Alg 4 uses
+    only the stale buffers each client already holds), so they reuse
+    ``glasu.local_update_steps`` and emit no messages.
+
+    Returns (params, opt_state, losses, log).
+    """
+    log = MessageLog()
+    if cfg.agg_layers:
+        log_index_sync(log, batch, cfg)
+        _, stale, _ = simulate_joint_inference(params, batch, cfg, log=log,
+                                               return_stale=True)
+    else:
+        stale = {}
+    g_hl = None
+    if cfg.labels_at_client is not None:
+        g_hl = glasu.label_owner_grad(params, batch, stale, cfg)
+    params, opt_state, losses = glasu.local_update_steps(
+        params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
+    return params, opt_state, losses, log

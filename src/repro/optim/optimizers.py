@@ -32,6 +32,32 @@ def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
 
 
+# ------------------------------------------------------------------- factory
+OPTIMIZER_NAMES = ("sgd", "momentum", "adam", "adamw", "adafactor")
+
+
+def make_optimizer(name: str, lr: ScalarOrSchedule, momentum: float = 0.9,
+                   weight_decay: float = 0.01) -> "Optimizer":
+    """Single optimizer factory for the whole repo (union of names).
+
+    'sgd' is plain SGD; 'momentum' is SGD with heavy-ball momentum — callers
+    that historically spelled momentum-SGD as 'sgd' normalize the name before
+    calling (see core.train / core.steps shims).
+    """
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return sgd(lr, momentum=momentum)
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer {name!r}; expected one of "
+                     f"{OPTIMIZER_NAMES}")
+
+
 # ----------------------------------------------------------------- schedules
 def constant_schedule(v: float) -> Schedule:
     return lambda step: jnp.asarray(v)

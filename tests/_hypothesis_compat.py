@@ -1,0 +1,58 @@
+"""``hypothesis`` if installed, else a tiny deterministic fallback.
+
+The fallback implements exactly the subset this suite uses —
+``@settings(max_examples=..., deadline=...)`` + ``@given`` with
+``st.integers`` and ``st.sampled_from`` — by looping the test body over
+seeded draws. Property tests therefore still *run* (deterministically, no
+shrinking) in containers without the dependency.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect as _inspect
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(
+                lambda rng: elems[int(rng.integers(0, len(elems)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", 10)
+                rng = _np.random.default_rng(0)
+                for _ in range(n):
+                    draw = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **draw)
+            # hide the drawn parameters from pytest's fixture resolution
+            del runner.__wrapped__
+            runner.__signature__ = _inspect.Signature()
+            return runner
+        return deco

@@ -1,0 +1,202 @@
+"""Unified experiment API: config validation, derived fields, round-trip,
+presets, optimizer consolidation, and checkpoint-hook resume."""
+import json
+
+import pytest
+
+from repro.api import ExperimentConfig, Trainer, get_preset, list_presets
+from repro.api.config import agg_layers_for_k
+from repro.configs.base import GNN_ARCH_IDS, get_gnn_arch, get_gnn_reduced
+from repro.core.steps import make_optimizer as steps_make_optimizer
+from repro.core.train import TrainConfig
+from repro.core.train import make_optimizer as train_make_optimizer
+from repro.graph.synth import make_vfl_dataset
+from repro.optim import optimizers as opt_lib
+
+TINY = ExperimentConfig(name="tiny-exp", dataset="tiny", hidden=16,
+                        batch_size=8, size_cap=96, rounds=4, eval_every=2,
+                        lr=0.02)
+
+
+# ------------------------------------------------------------- validation
+def test_missing_prediction_layer_aggregation_rejected():
+    with pytest.raises(ValueError, match="prediction-layer"):
+        ExperimentConfig(n_layers=4, agg_layers=(0, 2))
+
+
+def test_mismatched_n_clients_rejected_at_bind():
+    data = make_vfl_dataset("tiny", n_clients=2, seed=0)
+    with pytest.raises(ValueError, match="mismatched n_clients"):
+        TINY.glasu_config(data)  # TINY expects 3 model clients
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(method="nope"), "unknown method"),
+    (dict(backend="grpc"), "unknown backend"),
+    (dict(optimizer="lion"), "unknown optimizer"),
+    (dict(agg="concat", backbone="gcnii"), "concat"),
+    (dict(method="simulated-centralized", agg_layers=None, n_local_steps=4),
+     "Q == 1"),
+    (dict(method="standalone", agg_layers=(1, 3)), "no communication"),
+    (dict(labels_at_client=7), "out of range"),
+    (dict(backend="simulation", dp_sigma=0.5), "privacy"),
+    (dict(agg_layers=(1, 5)), "out of range"),
+    (dict(n_local_steps=0), "Q"),
+])
+def test_cross_field_validation(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        TINY.with_(**kw)
+
+
+def test_explicit_k_must_match_explicit_agg_layers():
+    with pytest.raises(ValueError, match="inconsistent"):
+        ExperimentConfig(dataset="tiny", k=3, agg_layers=(1, 3))
+
+
+# ---------------------------------------------------------- derived fields
+def test_with_rederives_agg_layers_on_scenario_change():
+    glasu = get_preset("cora-gcnii-glasu")
+    assert glasu.with_(k=1).agg_layers == (3,)
+    assert glasu.with_(method="standalone").agg_layers == ()
+    assert glasu.with_(n_layers=6).agg_layers == agg_layers_for_k(6, 3)
+    # explicit agg_layers in the same call wins over re-derivation
+    assert glasu.with_(n_layers=2, agg_layers=(1,)).agg_layers == (1,)
+
+
+def test_agg_layers_derived_by_method():
+    assert TINY.agg_layers == (1, 3)                        # K = L/2 uniform
+    assert TINY.with_(agg_layers=None, k=1).agg_layers == (3,)
+    assert TINY.with_(method="standalone", agg_layers=None).agg_layers == ()
+    sim = TINY.with_(method="simulated-centralized", agg_layers=None)
+    assert sim.agg_layers == (0, 1, 2, 3)
+    assert agg_layers_for_k(6, 3) == (1, 3, 5)
+
+
+def test_method_specific_derivations():
+    fedbcd = TINY.with_(method="fedbcd")
+    assert fedbcd.resolved_fanout == 0                      # A(E_m) = I
+    assert fedbcd.sampler_config().fanout == 0
+    assert fedbcd.fanout == TINY.fanout                     # field preserved...
+    assert fedbcd.with_(method="glasu").resolved_fanout == TINY.fanout  # ...so
+    # switching back to a graph-based method restores real sampling
+    cent = TINY.with_(method="centralized")
+    assert cent.model_clients == 1 and cent.n_clients == 3
+    assert TINY.resolved_eval_mode == "ensemble"
+    stal = TINY.with_(method="standalone", agg_layers=None)
+    assert stal.resolved_eval_mode == "per_client"
+    assert stal.sampler_agg_layers == (3,)      # shared mini-batch S[L] only
+
+
+def test_sampler_and_model_configs_are_consistent():
+    scfg = TINY.sampler_config()
+    assert scfg.n_layers == TINY.n_layers
+    assert tuple(scfg.agg_layers) == TINY.agg_layers
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    mcfg = TINY.glasu_config(data)
+    assert mcfg.d_in == max(c.feat_dim for c in data.clients)
+    assert mcfg.n_classes == data.n_classes
+    assert mcfg.agg_layers == TINY.agg_layers
+    assert TINY.train_config().eval_mode == "ensemble"
+
+
+def test_from_legacy_accepts_unsorted_and_rejects_mismatch():
+    from repro.core.glasu import GlasuConfig
+    from repro.graph.sampler import SamplerConfig
+
+    mk = dict(n_clients=3, n_layers=4, hidden=16, n_classes=4, d_in=16)
+    # unsorted but equal schedules are fine (membership-only semantics)
+    cfg = ExperimentConfig.from_legacy(
+        GlasuConfig(**mk, agg_layers=(3, 1)),
+        SamplerConfig(n_layers=4, agg_layers=(3, 1)), TrainConfig())
+    assert cfg.agg_layers == (1, 3)
+    # standalone with a sampler that shares more than the mini-batch is loud
+    with pytest.raises(ValueError, match="mismatched agg_layers"):
+        ExperimentConfig.from_legacy(
+            GlasuConfig(**mk, agg_layers=()),
+            SamplerConfig(n_layers=4, agg_layers=(1, 3)), TrainConfig())
+
+
+# --------------------------------------------------------------- round-trip
+def test_to_dict_from_dict_roundtrip():
+    for cfg in (TINY, TINY.with_(method="standalone", agg_layers=None),
+                get_preset("pubmed-gat-fedbcd")):
+        d = json.loads(json.dumps(cfg.to_dict()))   # must be JSON-serializable
+        assert ExperimentConfig.from_dict(d) == cfg
+
+
+def test_from_dict_rejects_unknown_fields():
+    d = TINY.to_dict()
+    d["n_epochs"] = 10
+    with pytest.raises(ValueError, match="unknown fields"):
+        ExperimentConfig.from_dict(d)
+
+
+# ------------------------------------------------------------------ presets
+def test_preset_grid_complete():
+    names = list_presets()
+    assert len(names) == 45                     # 3 datasets x 3 backbones x 5
+    assert "cora-gcnii-glasu" in names
+    glasu = get_preset("cora-gcnii-glasu")
+    assert glasu.n_local_steps == 4 and glasu.agg_layers == (1, 3)
+    assert get_preset("citeseer-gcn-standalone").agg_layers == ()
+    with pytest.raises(ValueError, match="unknown preset"):
+        get_preset("cora-gcnii-magic")
+
+
+def test_gnn_arch_ids_resolve_to_real_modules():
+    for arch_id in GNN_ARCH_IDS:
+        cfg = get_gnn_arch(arch_id)
+        assert isinstance(cfg, ExperimentConfig) and cfg.name == arch_id
+        red = get_gnn_reduced(arch_id)
+        assert red.dataset == "tiny" and red.hidden < cfg.hidden
+
+
+# ------------------------------------------------- optimizer consolidation
+def test_make_optimizer_union_of_names():
+    for name in opt_lib.OPTIMIZER_NAMES:
+        opt = opt_lib.make_optimizer(name, 0.1)
+        assert isinstance(opt, opt_lib.Optimizer)
+    with pytest.raises(ValueError, match="unknown optimizer"):
+        opt_lib.make_optimizer("lion", 0.1)
+
+
+def test_legacy_factories_delegate():
+    # legacy lenient behavior preserved: unknown names fall back
+    assert isinstance(train_make_optimizer(TrainConfig(optimizer="mystery")),
+                      opt_lib.Optimizer)
+
+    class _ArchStub:
+        optimizer = "sgd"
+        lr = 0.1
+
+    assert isinstance(steps_make_optimizer(_ArchStub()), opt_lib.Optimizer)
+
+
+# ------------------------------------------------------- checkpoint resume
+def test_trainer_checkpoint_save_and_resume(tmp_path):
+    import jax
+    import numpy as np
+
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = TINY.with_(rounds=2, ckpt_dir=str(tmp_path))
+    res = Trainer(cfg, data=data).run()
+    assert res.rounds_run == 2
+    assert (tmp_path / "experiment.json").exists()
+    assert (tmp_path / "LATEST").read_text().strip() == "2"
+
+    # resume with extended schedule: fast-forwards past round 2 and must be
+    # indistinguishable from an uninterrupted 4-round run (same sampler
+    # stream, same keys, history carried over)
+    res2 = Trainer(cfg.with_(rounds=4), data=data).run()
+    assert res2.rounds_run == 4
+    assert (tmp_path / "LATEST").read_text().strip() == "4"
+    assert [h["round"] for h in res2.history] == [2, 4]
+    uninterrupted = Trainer(TINY.with_(rounds=4), data=data).run()
+    for a, b in zip(jax.tree.leaves(res2.params),
+                    jax.tree.leaves(uninterrupted.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+    # a state-shaping field may NOT change across a resume
+    with pytest.raises(ValueError, match="different experiment config"):
+        Trainer(cfg.with_(rounds=6, hidden=32), data=data).run()
