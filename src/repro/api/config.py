@@ -100,8 +100,8 @@ class ExperimentConfig:
             err("n_clients and n_layers must be positive")
         if self.n_local_steps < 1:
             err("n_local_steps (Q) must be >= 1")
-        if self.rounds < 1:
-            err("rounds must be >= 1")
+        if self.rounds < 0:
+            err("rounds must be >= 0")   # 0 = eval-only run
         if self.agg not in ("mean", "concat"):
             err(f"unknown aggregation {self.agg!r}")
         if self.agg == "concat" and self.backbone != "gcn":

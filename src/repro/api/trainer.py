@@ -83,18 +83,19 @@ class EvalHook(Hook):
             p, mcfg, feats, nbr_idx, nbr_mask,
             chunk=min(4096, data.n_nodes)))
 
-    def on_round_end(self, trainer, metrics):
-        cfg, st = trainer.cfg, trainer.state
-        if st.round % cfg.eval_every != 0 and st.round != cfg.rounds:
-            return
-        data = trainer.data
+    def _append_entry(self, trainer):
+        cfg, st, data = trainer.cfg, trainer.state, trainer.data
         logits = self.eval_fn(st.params)
         mode = cfg.resolved_eval_mode
         val = float(glasu.accuracy_from_logits(
             logits, data.full.labels, data.full.val_idx, mode))
         test = float(glasu.accuracy_from_logits(
             logits, data.full.labels, data.full.test_idx, mode))
-        entry = {"round": st.round, "loss": float(st.last_losses[-1]),
+        # no round has run yet (rounds == 0, or a resume landing exactly on
+        # cfg.rounds): there is no loss to report, not a crash
+        loss = (float(st.last_losses[-1]) if st.last_losses is not None
+                else float("nan"))
+        entry = {"round": st.round, "loss": loss,
                  "val_acc": val, "test_acc": test,
                  "comm_bytes": st.comm_bytes,
                  "seconds": time.perf_counter() - st.t0}
@@ -103,6 +104,21 @@ class EvalHook(Hook):
             st.val_acc, st.test_acc = val, test
         for h in trainer.hooks:
             h.on_eval(trainer, entry)
+
+    def on_round_end(self, trainer, metrics):
+        cfg, st = trainer.cfg, trainer.state
+        if st.round % cfg.eval_every != 0 and st.round != cfg.rounds:
+            return
+        self._append_entry(trainer)
+
+    def on_train_end(self, trainer):
+        """Guarantee a final history entry: covers rounds == 0, a resume
+        landing exactly on cfg.rounds, and a hook stopping the run between
+        eval cadences (e.g. early stop triggered off round metrics)."""
+        st = trainer.state
+        if st.history and st.history[-1]["round"] == st.round:
+            return
+        self._append_entry(trainer)
 
 
 class EarlyStopHook(Hook):
@@ -167,6 +183,15 @@ class CheckpointHook(Hook):
             st.comm_bytes = loop["comm_bytes"]
             st.val_acc, st.test_acc = loop["val_acc"], loop["test_acc"]
             st.history = loop["history"]
+            # restore the wall-clock baseline: offset t0 by the elapsed
+            # seconds persisted at save time so 'seconds' in new history
+            # entries continues monotonically from the restored ones
+            # (older sidecars lack the field — fall back to the last
+            # restored entry's timestamp)
+            elapsed = loop.get("elapsed_seconds",
+                               st.history[-1]["seconds"] if st.history
+                               else 0.0)
+            st.t0 = time.perf_counter() - elapsed
         else:
             pathlib.Path(self.ckpt_dir).mkdir(parents=True, exist_ok=True)
             meta.write_text(json.dumps(trainer.cfg.to_dict(), indent=1))
@@ -177,7 +202,8 @@ class CheckpointHook(Hook):
         checkpoint.save(self.ckpt_dir, st.round, self._tree(st))
         self._sidecar(st.round).write_text(json.dumps(
             {"comm_bytes": st.comm_bytes, "val_acc": st.val_acc,
-             "test_acc": st.test_acc, "history": st.history}))
+             "test_acc": st.test_acc, "history": st.history,
+             "elapsed_seconds": time.perf_counter() - st.t0}))
         checkpoint.cleanup(self.ckpt_dir, keep=self.keep)
         live = {int(f.stem.split("_")[1])
                 for f in pathlib.Path(self.ckpt_dir).glob("ckpt_*.npz")}
@@ -238,7 +264,11 @@ class Trainer:
             # same batch sequence as an uninterrupted one
             self.sampler.sample_round()
         for t in range(st.round, cfg.rounds):
-            batch = jax.tree.map(jnp.asarray, self.sampler.sample_round())
+            # jnp.array (copy) not jnp.asarray: on CPU the latter zero-copy
+            # aliases the sampler's reused scratch buffers, which the next
+            # sample_round overwrites while this round's async computation
+            # may still be reading them
+            batch = jax.tree.map(jnp.array, self.sampler.sample_round())
             out = self.backend.run_round(st.params, st.opt_state, batch,
                                          jax.random.fold_in(key, t))
             st.params, st.opt_state = out.params, out.opt_state

@@ -47,7 +47,7 @@ class GlasuConfig:
     dp_sigma: float = 0.0                 # §3.6 DP hook (noise on uploads)
     secure_agg: bool = False              # §3.6 SA hook (cancelling masks)
     labels_at_client: Optional[int] = None  # Appendix B.2 (Alg 5-7): one label owner
-    use_pallas: bool = False              # graph_agg Pallas kernel for gather-mean
+    use_pallas: bool = False              # fused Pallas kernels (GCN/GCNII/GAT)
 
     def __post_init__(self):
         if self.agg_layers:
@@ -94,19 +94,42 @@ def init_params(key, cfg: GlasuConfig):
 # --------------------------------------------------------------------- layers
 def _pallas_gcn_layer(p, h, h0, idx, mask):
     """GCN client sub-layer on the fused Pallas graph_agg kernel
-    (gather + masked mean + MXU matmul in one pallas_call)."""
+    (one-hot gather-matmul + masked mean + MXU matmul in one pallas_call)."""
     from ..kernels import ops as kops
     out = kops.graph_agg(h, idx, mask, p["W"])
     return jax.nn.relu(out + p["b"])
 
 
+def _pallas_gcnii_layer(p, h, h0, idx, mask, alpha, beta):
+    """GCNII client sub-layer fully fused: gather-mean + initial residual +
+    identity-map skip + matmul + relu in one pallas_call."""
+    from ..kernels import ops as kops
+    return kops.gcnii_layer(h, h0, idx, mask, p["W"], p["b"],
+                            alpha=alpha, beta=beta)
+
+
+def _pallas_gat_layer(p, h, h0, idx, mask):
+    """GAT client sub-layer fully fused: per-head projection + masked softmax
+    attention over the sampled fanout + head mix in one pallas_call."""
+    from ..kernels import ops as kops
+    return kops.gat_layer(h, idx, mask, p["W"], p["a_src"], p["a_dst"],
+                          p["b"])
+
+
 def _client_layer(cfg: GlasuConfig, l: int):
+    """Resolve layer l's sub-layer fn; ``use_pallas=True`` covers all three
+    paper backbones (GCN, GCNII, GAT) with fused kernels."""
     _, layer_fn = BACKBONES[cfg.backbone]
     if cfg.backbone == "gcnii":
         beta = cfg.gcnii_beta / (l + 1)   # beta_l = lambda / l decay as in [7]
+        if cfg.use_pallas:
+            return functools.partial(_pallas_gcnii_layer,
+                                     alpha=cfg.gcnii_alpha, beta=beta)
         return functools.partial(layer_fn, alpha=cfg.gcnii_alpha, beta=beta)
     if cfg.backbone == "gcn" and cfg.use_pallas:
         return _pallas_gcn_layer
+    if cfg.backbone == "gat" and cfg.use_pallas:
+        return _pallas_gat_layer
     return layer_fn
 
 

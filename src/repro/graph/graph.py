@@ -14,6 +14,51 @@ from typing import List, Optional
 import numpy as np
 
 
+def scatter_neighbor_rows(table, indptr, indices, deg_full, cap,
+                          rng: np.random.Generator, col_offset: int = 0,
+                          mask=None):
+    """Fill ``table[:, col_offset:col_offset+cap]`` with (subsampled) CSR
+    neighbor rows, fully vectorized (no per-node Python loop):
+
+      * rows with degree <= cap keep all neighbors, scattered straight from
+        CSR (column order is irrelevant to masked-mean aggregation and to
+        uniform column draws);
+      * hub rows (degree > cap) keep a uniform without-replacement subsample:
+        one random key matrix over the hub rows, invalid columns masked to
+        +inf, ``argpartition`` picks the cap smallest keys per row. Hub rows
+        are chunked so the key matrix stays bounded regardless of max degree.
+
+    Optionally sets ``mask`` to 1.0 at every filled slot. Shared by the
+    sampler's training tables and the eval-time ``padded_neighbor_table``.
+    """
+    under = deg_full <= cap
+    iu = np.flatnonzero(under)
+    if len(iu):
+        du = deg_full[iu]
+        rowu = np.repeat(iu, du)
+        posu = (np.arange(len(rowu), dtype=np.int64)
+                - np.repeat(np.cumsum(du) - du, du))
+        table[rowu, col_offset + posu] = \
+            indices[np.repeat(indptr[:-1][iu], du) + posu]
+        if mask is not None:
+            mask[rowu, col_offset + posu] = 1.0
+    ih = np.flatnonzero(~under)
+    if len(ih):
+        dmax = int(deg_full[ih].max())
+        chunk = max(1, int(5_000_000 // max(dmax, 1)))
+        cols = np.arange(cap)
+        for lo in range(0, len(ih), chunk):
+            rows = ih[lo:lo + chunk]
+            d = deg_full[rows]
+            keys = rng.random((len(rows), dmax), dtype=np.float32)
+            keys[np.arange(dmax)[None, :] >= d[:, None]] = np.inf
+            pick = np.argpartition(keys, cap - 1, axis=1)[:, :cap]
+            table[rows[:, None], col_offset + cols[None, :]] = \
+                indices[indptr[rows][:, None] + pick]
+            if mask is not None:
+                mask[rows[:, None], col_offset + cols[None, :]] = 1.0
+
+
 @dataclass
 class Graph:
     """Undirected graph in CSR with per-node features/labels."""
@@ -55,20 +100,16 @@ class Graph:
         Returns (idx, mask) int32/float32.
         """
         n = self.n_nodes
-        width = max_deg + (1 if include_self else 0)
+        off = 1 if include_self else 0
+        width = max_deg + off
         idx = np.zeros((n, width), dtype=np.int32)
         mask = np.zeros((n, width), dtype=np.float32)
-        for i in range(n):
-            nbrs = self.neighbors(i)
-            if len(nbrs) > max_deg:
-                nbrs = rng.choice(nbrs, size=max_deg, replace=False)
-            off = 0
-            if include_self:
-                idx[i, 0] = i
-                mask[i, 0] = 1.0
-                off = 1
-            idx[i, off:off + len(nbrs)] = nbrs
-            mask[i, off:off + len(nbrs)] = 1.0
+        if include_self:
+            idx[:, 0] = np.arange(n, dtype=np.int32)
+            mask[:, 0] = 1.0
+        scatter_neighbor_rows(idx, self.indptr, self.indices,
+                              np.diff(self.indptr), max_deg, rng,
+                              col_offset=off, mask=mask)
         return idx, mask
 
 

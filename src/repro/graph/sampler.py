@@ -24,11 +24,17 @@ from typing import List, NamedTuple, Sequence
 
 import numpy as np
 
-from .graph import Graph, VFLDataset
+from .graph import Graph, VFLDataset, scatter_neighbor_rows
 
 
 class SampledBatch(NamedTuple):
-    """Static-shape mini-batch for one GLASU round (all clients stacked)."""
+    """Static-shape mini-batch for one GLASU round (all clients stacked).
+
+    The arrays are views into per-layer scratch buffers owned by the sampler
+    and are overwritten by the next ``sample_round`` call — consume or copy
+    them (``jnp.array``, not ``jnp.asarray``: the latter zero-copy aliases
+    host numpy buffers on CPU) before sampling again.
+    """
 
     feats: np.ndarray                 # (M, n0, d_pad) f32 client-0-layer features
     gather_idx: tuple                 # per layer l: (M, n_{l+1}, F+1) int32
@@ -43,16 +49,22 @@ class SampledBatch(NamedTuple):
 
 
 def _padded_tables(g: Graph, cap: int, rng: np.random.Generator):
-    """Pre-pack CSR into a (N, cap) neighbor table for vectorized sampling."""
+    """Pre-pack CSR into a (N, cap) neighbor table for vectorized sampling.
+
+    Fully vectorized (no per-node Python loop):
+
+      * rows with degree <= cap keep all neighbors, scattered straight from
+        CSR (column order is irrelevant — sampling draws a uniform column);
+      * hub rows (degree > cap) keep a uniform without-replacement subsample:
+        one random matrix over the hub rows, invalid columns masked to +inf,
+        ``argpartition`` picks the cap smallest keys per row. Hub rows are
+        chunked so the scratch matrix stays bounded regardless of max degree.
+    """
     n = g.n_nodes
     table = np.full((n, cap), -1, dtype=np.int32)
-    deg = np.zeros(n, dtype=np.int32)
-    for i in range(n):
-        nbrs = g.neighbors(i)
-        if len(nbrs) > cap:
-            nbrs = rng.choice(nbrs, size=cap, replace=False)
-        table[i, :len(nbrs)] = nbrs
-        deg[i] = len(nbrs)
+    deg_full = np.diff(g.indptr)
+    scatter_neighbor_rows(table, g.indptr, g.indices, deg_full, cap, rng)
+    deg = np.minimum(deg_full, cap).astype(np.int32)
     return table, deg
 
 
@@ -80,6 +92,24 @@ class GlasuSampler:
         self.tables = [_padded_tables(c, cfg.table_cap, table_rng) for c in data.clients]
         self.d_pad = max(c.feat_dim for c in data.clients)
         self.layer_sizes = self._plan_sizes()
+        # per-layer scratch reused across rounds (see SampledBatch docstring)
+        M, F1 = self.M, cfg.fanout + 1
+        self._scratch = [
+            (np.zeros((M, self.layer_sizes[l + 1], F1), np.int32),
+             np.zeros((M, self.layer_sizes[l + 1], F1), np.float32),
+             np.zeros((M, self.layer_sizes[l + 1]), np.float32),
+             np.zeros((M, self.layer_sizes[l + 1]), np.int32))
+            for l in range(cfg.n_layers)]
+        self._feat_scratch = np.zeros((M, self.layer_sizes[0], self.d_pad),
+                                      np.float32)
+        # O(1) id -> position lookup used by _positions (reset after each use)
+        self._pos_lut = np.full(data.n_nodes, -1, dtype=np.int64)
+        # candidate mark array used by _build_set (reset after each use)
+        self._mark = np.zeros(data.n_nodes, dtype=np.uint8)
+        # all clients' tables stacked for the batched per-layer draw
+        self._tables = np.stack([t for t, _ in self.tables])   # (M, N, cap)
+        self._degs = np.stack([d for _, d in self.tables])     # (M, N)
+        self._m_idx = np.arange(M)
 
     # ``S[j]`` is shared iff (j-1) in I or j == L.
     def _shared(self, j: int) -> bool:
@@ -98,45 +128,72 @@ class GlasuSampler:
 
     def _sample_neighbors(self, m: int, centers: np.ndarray) -> np.ndarray:
         """(n, F) sampled neighbor ids for client m (with replacement), -1 pad."""
-        table, deg = self.tables[m]
+        return self._sample_neighbors_all(centers[None],
+                                          self._m_idx[m:m + 1])[0]
+
+    def _sample_neighbors_all(self, centers: np.ndarray,
+                              m_idx=None) -> np.ndarray:
+        """(M, n) centers -> (M, n, F) sampled neighbors for every client in
+        one batched draw (with replacement), -1 pad."""
+        if m_idx is None:
+            m_idx = self._m_idx
         f = self.cfg.fanout
         valid = centers >= 0
         safe = np.where(valid, centers, 0)
-        d = deg[safe]
-        cols = (self.rng.integers(0, 1 << 30, size=(len(centers), f))
-                % np.maximum(d, 1)[:, None]).astype(np.int64)
-        nb = table[safe[:, None], cols]
-        nb = np.where((d[:, None] > 0) & valid[:, None], nb, -1)
-        return nb.astype(np.int32)
+        d = self._degs[m_idx[:, None], safe]                  # (M, n)
+        # direct bounded draw per row — a wide draw reduced mod d skews the
+        # first (2^30 mod d) neighbor slots upward
+        cols = self.rng.integers(0, np.maximum(d, 1)[..., None],
+                                 size=(*centers.shape, f))
+        nb = self._tables[m_idx[:, None, None], safe[..., None], cols]
+        return np.where((d[..., None] > 0) & valid[..., None], nb, -1)
 
-    @staticmethod
-    def _build_set(centers_list, nbrs_list, size) -> np.ndarray:
-        """Order: unique centers first (never dropped), then other candidates."""
-        centers = np.unique(np.concatenate(centers_list))
-        centers = centers[centers >= 0]
-        others = np.unique(np.concatenate([x.ravel() for x in nbrs_list]))
-        others = others[others >= 0]
-        others = np.setdiff1d(others, centers, assume_unique=True)
+    def _build_set(self, centers_list, nbrs_list, size) -> np.ndarray:
+        """Order: unique centers first (never dropped), then other candidates.
+
+        Dedup runs on the cached mark array (O(N) scans, no sorts); both id
+        groups come out ascending, matching the previous np.unique order.
+        """
+        mark = self._mark
+        for x in nbrs_list:
+            v = np.asarray(x).ravel()
+            mark[v[v >= 0]] = 1
+        for x in centers_list:
+            v = np.asarray(x).ravel()
+            mark[v[v >= 0]] = 2
+        ids = np.flatnonzero(mark)
+        vals = mark[ids]
+        centers = ids[vals == 2]
+        others = ids[vals == 1]
+        mark[ids] = 0
         if len(centers) > size:
             raise RuntimeError("layer size too small for center set")
         room = size - len(centers)
         if len(others) > room:
-            others = others[:room]  # deterministic truncation
-        s = np.concatenate([centers, others])
+            # ids come out sorted — truncating directly would always keep
+            # the lowest node ids and permanently drop high-id neighbors;
+            # permute with the round RNG first (reproducible under the seed)
+            others = self.rng.permutation(others)[:room]
         out = np.full(size, -1, dtype=np.int32)
-        out[:len(s)] = s
+        out[:len(centers)] = centers
+        out[len(centers):len(centers) + len(others)] = others
         return out
 
-    @staticmethod
-    def _positions(node_set: np.ndarray, query: np.ndarray):
-        """positions of ``query`` ids in ``node_set`` (-1 if absent)."""
-        order = np.argsort(node_set, kind="stable")
-        sorted_set = node_set[order]
+    def _positions(self, node_set: np.ndarray, query: np.ndarray):
+        """positions of ``query`` ids in ``node_set`` (-1 if absent).
+
+        O(|set| + |query|) via the cached id->position lookup table (touched
+        entries are reset afterwards so the table stays all -1). Node sets
+        from ``_build_set`` keep their valid ids as a prefix (-1 padding at
+        the tail), which the lookup fill exploits.
+        """
+        lut = self._pos_lut
+        k = int((node_set >= 0).sum())
+        ids = node_set[:k]
+        lut[ids] = np.arange(k)
         q = query.ravel()
-        loc = np.searchsorted(sorted_set, q)
-        loc = np.clip(loc, 0, len(sorted_set) - 1)
-        hit = (sorted_set[loc] == q) & (q >= 0)
-        pos = np.where(hit, order[loc], -1)
+        pos = np.where(q >= 0, lut[np.maximum(q, 0)], -1)
+        lut[ids] = -1
         return pos.reshape(query.shape).astype(np.int32)
 
     def sample_round(self) -> SampledBatch:
@@ -145,36 +202,40 @@ class GlasuSampler:
         train_idx = self.data.full.train_idx
         batch = self.rng.choice(train_idx, size=cfg.batch_size,
                                 replace=len(train_idx) < cfg.batch_size).astype(np.int32)
-        cur = [batch.copy() for _ in range(M)]      # S_m[L] (shared)
+        cur = np.tile(batch, (M, 1))                # S_m[L] (shared), (M, n)
         gidx, gmask, rvalid, spos = [None] * L, [None] * L, [None] * L, [None] * L
 
         for l in range(L - 1, -1, -1):
-            nbrs = [self._sample_neighbors(m, cur[m]) for m in range(M)]
+            nbrs = self._sample_neighbors_all(cur)  # (M, n, F), one draw
             size = self.layer_sizes[l]
+            gi, gm, rv, sp = self._scratch[l]       # reused across rounds
+            # self positions ride as column 0 of the gather query, so one
+            # _positions call per client (or one batched call when shared)
+            # fills the whole (n, F+1) index/mask block
+            query = np.concatenate([cur[..., None], nbrs], axis=2)
             if self._shared(l):
-                shared_set = self._build_set(cur, nbrs, size)
-                sets = [shared_set] * M
+                sset = self._build_set([cur], [nbrs], size)
+                pos = self._positions(sset, query)          # (M, n, F+1)
+                gi[...] = np.maximum(pos, 0)
+                gm[...] = pos >= 0
+                cur_next = np.tile(sset, (M, 1))
             else:
-                sets = [self._build_set([cur[m]], [nbrs[m]], size) for m in range(M)]
-
-            gi = np.zeros((M, self.layer_sizes[l + 1], cfg.fanout + 1), np.int32)
-            gm = np.zeros_like(gi, dtype=np.float32)
-            rv = np.zeros((M, self.layer_sizes[l + 1]), np.float32)
-            sp = np.zeros((M, self.layer_sizes[l + 1]), np.int32)
-            for m in range(M):
-                cpos = self._positions(sets[m], cur[m])          # self positions
-                npos = self._positions(sets[m], nbrs[m])         # neighbor positions
-                gi[m, :, 0] = np.maximum(cpos, 0)
-                gm[m, :, 0] = (cpos >= 0).astype(np.float32)
-                gi[m, :, 1:] = np.maximum(npos, 0)
-                gm[m, :, 1:] = (npos >= 0).astype(np.float32)
-                rv[m] = (cur[m] >= 0).astype(np.float32)
-                gm[m] *= rv[m][:, None]
-                sp[m] = np.maximum(cpos, 0)
+                sets = []
+                for m in range(M):
+                    s = self._build_set([cur[m]], [nbrs[m]], size)
+                    pos = self._positions(s, query[m])
+                    gi[m] = np.maximum(pos, 0)
+                    gm[m] = pos >= 0
+                    sets.append(s)
+                cur_next = np.stack(sets)
+            rv[...] = cur >= 0
+            gm *= rv[..., None]
+            sp[...] = gi[..., 0]
             gidx[l], gmask[l], rvalid[l], spos[l] = gi, gm, rv, sp
-            cur = sets
+            cur = cur_next
 
-        feats = np.zeros((M, self.layer_sizes[0], self.d_pad), np.float32)
+        feats = self._feat_scratch
+        feats.fill(0.0)
         for m in range(M):
             s = cur[m]
             ok = s >= 0

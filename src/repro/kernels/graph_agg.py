@@ -1,19 +1,34 @@
-"""Pallas TPU kernel: sampled-neighborhood aggregation + weight matmul.
+"""Pallas TPU kernels: sampled-neighborhood aggregation for GLASU sub-layers.
 
-This is the per-layer hotspot of the paper's split GNN:
+These are the per-layer hotspots of the paper's split GNN (§3.1, Alg 3/4):
 
-    H_m^+[l] = (masked-mean over sampled neighbors of H_m[l]) @ W_m[l]
+    GCN    H_m^+[l] = relu( (masked-mean nbrs of H) @ W + b )
+    GCNII  z = (1-a)·mean + a·H0[self];  relu((1-b)·z + b·(z @ W) + b)
+    GAT    per-head masked softmax attention over the sampled fanout
 
 TPU adaptation (vs the CUDA gather-scatter formulation): destination nodes
-are tiled in blocks of 128 (MXU/VREG lane alignment); the per-tile gather of
-fanout neighbor rows runs as dynamic-slice DMAs from the source-activation
-buffer (kept in ANY/HBM memory space) into a VMEM accumulator; the masked
-mean is fused with the weight matmul on the MXU. Output tile: (128, d_out).
+are tiled in blocks of 128 (MXU/VREG lane alignment) and the fanout gather is
+reformulated as a one-hot *scatter-matrix matmul*: for every destination tile
+we build A in VREGs with
 
-Grid: (n_dst // 128,). Per-tile VMEM footprint: gather indices (128 x F int32)
-+ accumulator (128 x d) + weight (d x d_out) — with the GNN's d, d_out <= 512
-this stays well under the ~16 MB v5e VMEM budget; d_out is additionally tiled
-if d * d_out grows beyond it.
+    A[r, s] = sum_f mask[r, f] * [idx[r, f] == s]        (BD x n_src)
+
+so the masked gather-sum is ``A @ H`` — one MXU contraction instead of
+128·F scalar DMAs per tile (the seed kernel's double ``fori_loop``).  The
+masked mean and the weight matmul fuse behind it in the same program.
+
+``d_out`` is tiled for real: the grid is (dst tiles, d_out tiles) and each
+program writes one (128, DOUT_BLOCK) output tile, so weight/output VMEM stays
+bounded for wide layers.  Each d_out tile recomputes the (cheap) scatter
+matrix instead of caching it in scratch: the GLASU core ``jax.vmap``s these
+kernels over the client axis, and Pallas batching *prepends* a grid axis,
+which would shift every ``pl.program_id``-gated scratch reuse.  With the
+usual hidden sizes (d_out <= 128) there is exactly one d_out tile and nothing
+is recomputed.
+
+Per-tile VMEM: scatter matrix (128 x n_src) + source rows (n_src x d) +
+one weight tile (d x DOUT_BLOCK) — with the sampler's n_src <= size_cap (512)
+and d <= 512 this stays well under the ~16 MB v5e budget.
 """
 from __future__ import annotations
 
@@ -24,26 +39,62 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DST_BLOCK = 128
+DOUT_BLOCK = 128
+NEG_INF = -1e9
 
 
-def _graph_agg_kernel(idx_ref, mask_ref, h_ref, w_ref, out_ref, *, fanout):
-    """One destination tile: gather+mean (DMA loop) fused with the matmul."""
-    acc = jnp.zeros((DST_BLOCK, h_ref.shape[1]), jnp.float32)
+def _scatter_matrix(idx, mask, n_src):
+    """One-hot accumulation matrix: A[r, s] = sum_f mask[r, f]·[idx[r, f]==s].
 
-    def body(f, acc):
-        # one neighbor column: dynamic one-row loads from the source buffer
-        def row(r, acc):
-            src = idx_ref[r, f]
-            hrow = h_ref[pl.dslice(src, 1), :]
-            m = mask_ref[r, f]
-            return acc.at[r].add(hrow[0].astype(jnp.float32) * m)
+    ``A @ H`` is the masked gather-sum over the fanout — the whole gather
+    runs on the MXU. The loop over fanout columns is a *Python* loop over a
+    static, small F (3-64), unrolled at trace time; every op is 2D.
+    """
+    src = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n_src), 1)
+    a = jnp.zeros((idx.shape[0], n_src), jnp.float32)
+    for f in range(idx.shape[1]):
+        a = a + jnp.where(idx[:, f:f + 1] == src, mask[:, f:f + 1], 0.0)
+    return a
 
-        return jax.lax.fori_loop(0, DST_BLOCK, row, acc)
 
-    acc = jax.lax.fori_loop(0, fanout, body, acc)
-    denom = jnp.maximum(jnp.sum(mask_ref[...], axis=1, keepdims=True), 1.0)
-    agg = (acc / denom).astype(w_ref.dtype)
-    out_ref[...] = jnp.dot(agg, w_ref[...],
+def _select_matrix(idx_col, n_src):
+    """Unmasked one-hot row-select matrix for a single index column."""
+    src = jax.lax.broadcasted_iota(jnp.int32, (idx_col.shape[0], n_src), 1)
+    return jnp.where(idx_col[:, None] == src, 1.0, 0.0)
+
+
+def _masked_mean(idx_ref, mask_ref, h_ref):
+    """(BD, d) masked mean of gathered source rows, f32."""
+    mask = mask_ref[...].astype(jnp.float32)
+    a = _scatter_matrix(idx_ref[...], mask, h_ref.shape[0])
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    s = jnp.dot(a, h_ref[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return s / denom
+
+
+def _pad_rows(x, block):
+    pad = (-x.shape[0]) % block
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+    return x
+
+
+def _dout_block(d_out: int) -> int:
+    return d_out if d_out <= DOUT_BLOCK else DOUT_BLOCK
+
+
+def _pad_cols(x, block):
+    pad = (-x.shape[-1]) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    return x
+
+
+# ----------------------------------------------------------------- GCN / agg
+def _graph_agg_kernel(idx_ref, mask_ref, h_ref, w_ref, out_ref):
+    agg = _masked_mean(idx_ref, mask_ref, h_ref)
+    out_ref[...] = jnp.dot(agg.astype(w_ref.dtype), w_ref[...],
                            preferred_element_type=jnp.float32
                            ).astype(out_ref.dtype)
 
@@ -53,22 +104,157 @@ def graph_agg_pallas(h, idx, mask, w, *, interpret: bool = True):
     n_dst, fanout = idx.shape
     d = h.shape[1]
     d_out = w.shape[1]
-    pad = (-n_dst) % DST_BLOCK
-    if pad:
-        idx = jnp.pad(idx, ((0, pad), (0, 0)))
-        mask = jnp.pad(mask, ((0, pad), (0, 0)))
-    grid = (idx.shape[0] // DST_BLOCK,)
+    bo = _dout_block(d_out)
+    idx = _pad_rows(idx, DST_BLOCK)
+    mask = _pad_rows(mask, DST_BLOCK)
+    wp = _pad_cols(w, bo)
+    grid = (idx.shape[0] // DST_BLOCK, wp.shape[1] // bo)
     out = pl.pallas_call(
-        functools.partial(_graph_agg_kernel, fanout=fanout),
+        _graph_agg_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((DST_BLOCK, fanout), lambda i: (i, 0)),   # idx tile
-            pl.BlockSpec((DST_BLOCK, fanout), lambda i: (i, 0)),   # mask tile
-            pl.BlockSpec((h.shape[0], d), lambda i: (0, 0)),       # source rows
-            pl.BlockSpec((d, d_out), lambda i: (0, 0)),            # weights
+            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0)),  # idx tile
+            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0)),  # mask
+            pl.BlockSpec((h.shape[0], d), lambda i, j: (0, 0)),      # sources
+            pl.BlockSpec((d, bo), lambda i, j: (0, j)),              # W tile
         ],
-        out_specs=pl.BlockSpec((DST_BLOCK, d_out), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((idx.shape[0], d_out), w.dtype),
+        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], wp.shape[1]), w.dtype),
         interpret=interpret,
-    )(idx, mask, h, w)
+    )(idx, mask, h, wp)
+    return out[:n_dst, :d_out]
+
+
+# -------------------------------------------------------------------- GCNII
+def _gcnii_kernel(idx_ref, mask_ref, h_ref, h0_ref, w_ref, b_ref, col_ref,
+                  out_ref, *, alpha, beta, block_out):
+    agg = _masked_mean(idx_ref, mask_ref, h_ref)
+    # initial residual: H0 at the output node set (self column, unmasked —
+    # mirrors the reference's plain h0[idx[:, 0]] gather)
+    sel0 = _select_matrix(idx_ref[...][:, 0], h0_ref.shape[0])
+    h0_sel = jnp.dot(sel0, h0_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    z = (1.0 - alpha) * agg + alpha * h0_sel                 # (BD, d_pad)
+    zw = jnp.dot(z.astype(w_ref.dtype), w_ref[...],
+                 preferred_element_type=jnp.float32)
+    # identity-map skip needs z restricted to this output tile's columns.
+    # col_ref carries the tile's column offset as data (a (1, 1) block of an
+    # offsets array indexed by the column grid axis) instead of
+    # pl.program_id(1) — vmap over the client axis prepends a grid dimension
+    # and would silently shift program_id axes.
+    z_cols = jax.lax.dynamic_slice_in_dim(z, col_ref[0, 0], block_out, axis=1)
+    out = (1.0 - beta) * z_cols + beta * zw + b_ref[...].astype(jnp.float32)
+    out_ref[...] = jax.nn.relu(out).astype(out_ref.dtype)
+
+
+def gcnii_layer_pallas(h, h0, idx, mask, w, b, *, alpha: float, beta: float,
+                       interpret: bool = True):
+    """Fused GCNII client sub-layer (constant width d == d_out).
+
+    h/h0: (n_src, d); idx/mask: (n_dst, F+1) with self at column 0;
+    w: (d, d); b: (d,) -> relu((1-β)z + β(z@W) + b), z = (1-α)·mean + α·h0.
+    """
+    n_dst, fanout1 = idx.shape
+    d = h.shape[1]
+    bo = _dout_block(d)
+    hp = _pad_cols(h, bo)
+    h0p = _pad_cols(h0, bo)
+    wp = _pad_cols(_pad_rows(w, bo), bo)
+    bp = _pad_cols(b[None, :], bo)
+    idx = _pad_rows(idx, DST_BLOCK)
+    mask = _pad_rows(mask, DST_BLOCK)
+    d_pad = hp.shape[1]
+    n_col_tiles = d_pad // bo
+    col_offsets = (jnp.arange(n_col_tiles, dtype=jnp.int32) * bo)[:, None]
+    grid = (idx.shape[0] // DST_BLOCK, n_col_tiles)
+    out = pl.pallas_call(
+        functools.partial(_gcnii_kernel, alpha=alpha, beta=beta,
+                          block_out=bo),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0)),
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0)),
+            pl.BlockSpec((hp.shape[0], d_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((h0p.shape[0], d_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((d_pad, bo), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bo), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),       # column offset
+        ],
+        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], d_pad), w.dtype),
+        interpret=interpret,
+    )(idx, mask, hp, h0p, wp, bp, col_offsets)
+    return out[:n_dst, :d]
+
+
+# ---------------------------------------------------------------------- GAT
+def _gat_kernel(idx_ref, mask_ref, h_ref, w_ref, asrc_ref, adst_ref, b_ref,
+                out_ref):
+    """One (dst tile, head) program: project, gather, masked softmax, mix.
+
+    The fanout gather runs as per-column one-hot matmuls; attention logits
+    are assembled column-by-column with an iota mask (all ops 2D, unrolled
+    over the static fanout — no 3D tensors, no program_id)."""
+    idx = idx_ref[...]
+    mask = mask_ref[...].astype(jnp.float32)
+    n_dst, f1 = idx.shape
+    n_src = h_ref.shape[0]
+    wh = jnp.dot(h_ref[...].astype(jnp.float32),
+                 w_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)          # (n_src, dh)
+    e_dst = jnp.sum(wh * adst_ref[...].astype(jnp.float32),
+                    axis=1, keepdims=True)                    # (n_src, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n_dst, f1), 1)
+    gathered = []
+    e = jnp.zeros((n_dst, f1), jnp.float32)
+    for f in range(f1):
+        sel = _select_matrix(idx[:, f], n_src)
+        gathered.append(jnp.dot(sel, wh, preferred_element_type=jnp.float32))
+        ecol = jnp.dot(sel, e_dst, preferred_element_type=jnp.float32)
+        e = e + jnp.where(cols == f, ecol, 0.0)
+    e_src = jnp.sum(gathered[0] * asrc_ref[...].astype(jnp.float32),
+                    axis=1, keepdims=True)                    # self = col 0
+    e = jax.nn.leaky_relu(e_src + e, negative_slope=0.2)
+    e = jnp.where(mask > 0, e, NEG_INF)
+    att = jax.nn.softmax(e, axis=1) * mask
+    out = jnp.zeros_like(gathered[0])
+    for f in range(f1):
+        out = out + att[:, f:f + 1] * gathered[f]
+    out_ref[...] = jax.nn.elu(
+        out + b_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def gat_layer_pallas(h, idx, mask, w, a_src, a_dst, b, *,
+                     interpret: bool = True):
+    """Fused multi-head GAT client sub-layer.
+
+    h: (n_src, d); idx/mask: (n_dst, F+1) with self at column 0;
+    w: (d, H, dh); a_src/a_dst: (H, dh); b: (H*dh,) -> (n_dst, H*dh).
+    Grid is (dst tiles, heads): each program handles one head's (128, dh)
+    output block; the head axis rides the BlockSpec index maps so no head
+    dimension is ever materialized in VMEM.
+    """
+    n_dst, fanout1 = idx.shape
+    d, n_heads, dh = w.shape
+    idx = _pad_rows(idx, DST_BLOCK)
+    mask = _pad_rows(mask, DST_BLOCK)
+    w2 = w.reshape(d, n_heads * dh)
+    b2 = b.reshape(1, n_heads * dh)
+    grid = (idx.shape[0] // DST_BLOCK, n_heads)
+    out = pl.pallas_call(
+        _gat_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0)),
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0)),
+            pl.BlockSpec((h.shape[0], d), lambda i, k: (0, 0)),
+            pl.BlockSpec((d, dh), lambda i, k: (0, k)),       # head's W
+            pl.BlockSpec((1, dh), lambda i, k: (k, 0)),       # head's a_src
+            pl.BlockSpec((1, dh), lambda i, k: (k, 0)),       # head's a_dst
+            pl.BlockSpec((1, dh), lambda i, k: (0, k)),       # head's bias
+        ],
+        out_specs=pl.BlockSpec((DST_BLOCK, dh), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((idx.shape[0], n_heads * dh), h.dtype),
+        interpret=interpret,
+    )(idx, mask, h, w2, a_src, a_dst, b2)
     return out[:n_dst]

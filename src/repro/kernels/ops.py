@@ -3,6 +3,13 @@
 On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
 body executes in Python/XLA for correctness validation; on TPU the same
 ``pallas_call`` lowers to Mosaic. The switch is automatic.
+
+``use_pallas=True`` in the GLASU core routes all three paper backbones
+(GCN, GCNII, GAT) through these fused kernels. ``pallas_call`` has no
+reverse-mode rule, and GLASU *trains* through the client sub-layers
+(Alg 4's LocalUpdate), so each graph op carries a ``custom_vjp``: the
+forward pass is the fused kernel, the backward pass differentiates the
+pure-jnp oracle in ``kernels/ref.py`` (bit-identical math, XLA-fused).
 """
 from __future__ import annotations
 
@@ -11,8 +18,9 @@ from typing import Optional
 
 import jax
 
+from . import ref
 from .flash_attention import flash_attention_pallas
-from .graph_agg import graph_agg_pallas
+from .graph_agg import gat_layer_pallas, gcnii_layer_pallas, graph_agg_pallas
 
 
 def _interpret() -> bool:
@@ -25,6 +33,79 @@ def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
                                   interpret=_interpret())
 
 
+# ---------------------------------------------------------------- graph ops
+@jax.custom_vjp
+def _graph_agg(h, idx, mask, w):
+    return graph_agg_pallas(h, idx, mask, w, interpret=_interpret())
+
+
+def _graph_agg_fwd(h, idx, mask, w):
+    out = graph_agg_pallas(h, idx, mask, w, interpret=_interpret())
+    return out, (h, idx, mask, w)
+
+
+def _graph_agg_bwd(res, g):
+    _, vjp = jax.vjp(ref.graph_agg_ref, *res)
+    return vjp(g)
+
+
+_graph_agg.defvjp(_graph_agg_fwd, _graph_agg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gcnii_layer(alpha, beta, h, h0, idx, mask, w, b):
+    return gcnii_layer_pallas(h, h0, idx, mask, w, b, alpha=alpha, beta=beta,
+                              interpret=_interpret())
+
+
+def _gcnii_layer_fwd(alpha, beta, h, h0, idx, mask, w, b):
+    out = gcnii_layer_pallas(h, h0, idx, mask, w, b, alpha=alpha, beta=beta,
+                             interpret=_interpret())
+    return out, (h, h0, idx, mask, w, b)
+
+
+def _gcnii_layer_bwd(alpha, beta, res, g):
+    fn = lambda *a: ref.gcnii_layer_ref(*a, alpha, beta)
+    _, vjp = jax.vjp(fn, *res)
+    return vjp(g)
+
+
+_gcnii_layer.defvjp(_gcnii_layer_fwd, _gcnii_layer_bwd)
+
+
+@jax.custom_vjp
+def _gat_layer(h, idx, mask, w, a_src, a_dst, b):
+    return gat_layer_pallas(h, idx, mask, w, a_src, a_dst, b,
+                            interpret=_interpret())
+
+
+def _gat_layer_fwd(h, idx, mask, w, a_src, a_dst, b):
+    out = gat_layer_pallas(h, idx, mask, w, a_src, a_dst, b,
+                           interpret=_interpret())
+    return out, (h, idx, mask, w, a_src, a_dst, b)
+
+
+def _gat_layer_bwd(res, g):
+    _, vjp = jax.vjp(ref.gat_layer_ref, *res)
+    return vjp(g)
+
+
+_gat_layer.defvjp(_gat_layer_fwd, _gat_layer_bwd)
+
+
 @jax.jit
 def graph_agg(h, idx, mask, w):
-    return graph_agg_pallas(h, idx, mask, w, interpret=_interpret())
+    """Masked-mean neighbor gather fused with the weight matmul (GCN core)."""
+    return _graph_agg(h, idx, mask, w)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta"))
+def gcnii_layer(h, h0, idx, mask, w, b, alpha: float, beta: float):
+    """Fused GCNII sub-layer: gather-mean + initial residual + identity map."""
+    return _gcnii_layer(alpha, beta, h, h0, idx, mask, w, b)
+
+
+@jax.jit
+def gat_layer(h, idx, mask, w, a_src, a_dst, b):
+    """Fused multi-head GAT sub-layer: projection + masked attention + mix."""
+    return _gat_layer(h, idx, mask, w, a_src, a_dst, b)

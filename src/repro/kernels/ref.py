@@ -18,6 +18,37 @@ def graph_agg_ref(h, idx, mask, w):
     return (s / denom) @ w
 
 
+def gcnii_layer_ref(h, h0, idx, mask, w, b, alpha: float, beta: float):
+    """Fused GCNII client sub-layer (initial residual + identity map).
+
+    h/h0: (n_src, d); idx/mask: (n_dst, F+1), self at column 0; w: (d, d).
+    """
+    g = h[idx]
+    s = jnp.sum(g * mask[..., None], axis=1)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    z = (1.0 - alpha) * (s / denom) + alpha * h0[idx[:, 0]]
+    return jax.nn.relu((1.0 - beta) * z + beta * (z @ w) + b)
+
+
+def gat_layer_ref(h, idx, mask, w, a_src, a_dst, b):
+    """Fused multi-head GAT client sub-layer (masked softmax attention).
+
+    h: (n_src, d); idx/mask: (n_dst, F+1), self at column 0; w: (d, H, dh);
+    a_src/a_dst: (H, dh); b: (H*dh,) -> (n_dst, H*dh).
+    """
+    n_heads, dh = a_src.shape
+    wh = jnp.einsum("nd,dhk->nhk", h, w)
+    wh_nb = wh[idx]                                 # (n_dst, F+1, H, dh)
+    wh_self = wh[idx[:, 0]]
+    e = (jnp.einsum("nhk,hk->nh", wh_self, a_src)[:, None, :]
+         + jnp.einsum("nfhk,hk->nfh", wh_nb, a_dst))
+    e = jax.nn.leaky_relu(e, negative_slope=0.2)
+    e = jnp.where(mask[..., None] > 0, e, -1e9)
+    att = jax.nn.softmax(e, axis=1) * mask[..., None]
+    out = jnp.einsum("nfh,nfhk->nhk", att, wh_nb)
+    return jax.nn.elu(out.reshape(out.shape[0], n_heads * dh) + b)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True,
                         window: Optional[int] = None):
     """q: (B, S, H, dh); k/v: (B, T, Kv, dh) -> (B, S, H, dh)."""

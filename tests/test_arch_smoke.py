@@ -23,6 +23,7 @@ def _tree_no_nan(tree):
             assert not bool(jnp.any(jnp.isnan(leaf))), "NaN in tree"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_forward_and_train_step(arch_id):
     cfg = get_reduced(arch_id)

@@ -30,6 +30,7 @@ def _bind_both(cfg):
     return mcfg, sampler, vb, sb, params, batch
 
 
+@pytest.mark.slow
 def test_joint_logits_parity():
     _, _, vb, sb, params, batch = _bind_both(CFG)
     np.testing.assert_allclose(np.asarray(sb.joint_logits(params, batch)),
@@ -37,6 +38,7 @@ def test_joint_logits_parity():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_round_parity_params_and_bytes():
     cfg = CFG
     mcfg, sampler, vb, sb, params, batch = _bind_both(cfg)
@@ -75,6 +77,7 @@ def test_message_log_breakdown_matches_cost_model_terms():
     assert log.total_bytes("index_sync") == idx
 
 
+@pytest.mark.slow
 def test_trainer_runs_on_simulation_backend():
     res = Trainer(CFG.with_(backend="simulation")).run()
     assert res.rounds_run == 2
@@ -82,6 +85,7 @@ def test_trainer_runs_on_simulation_backend():
     assert np.isfinite(res.history[-1]["loss"])
 
 
+@pytest.mark.slow
 def test_standalone_simulation_has_no_traffic():
     cfg = CFG.with_(method="standalone", agg_layers=None, backend="simulation")
     res = Trainer(cfg).run()

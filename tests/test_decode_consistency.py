@@ -20,6 +20,7 @@ def _greedy_from_prefill(params, cfg, tokens):
     return jnp.argmax(logits, axis=-1)      # (B, T) next-token at each pos
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", DECODE_ARCHS)
 def test_decode_matches_prefill(arch_id):
     # ample MoE capacity so routing drops cannot differ between the prefill
@@ -48,6 +49,7 @@ def test_decode_matches_prefill(arch_id):
                                   np.asarray(want[:, -1]))
 
 
+@pytest.mark.slow
 def test_decode_matches_prefill_encdec():
     cfg = get_reduced("seamless_m4t_large_v2")
     b, t, src = 2, 12, 8
@@ -76,6 +78,7 @@ def test_decode_matches_prefill_encdec():
     assert agree >= 0.9
 
 
+@pytest.mark.slow
 def test_ring_cache_equals_full_cache_within_window():
     """Sliding-window ring buffer must agree with a full cache + window mask."""
     cfg = get_reduced("smollm_360m").with_(sliding_window=8)
@@ -104,6 +107,7 @@ def test_ring_cache_equals_full_cache_within_window():
     assert agree >= 0.9
 
 
+@pytest.mark.slow
 def test_glasu_split_decode_matches_prefill():
     """The vertical-split transformer's decode path (per-client KV caches for
     block-diagonal layers + full caches for sync layers) must agree with its

@@ -173,6 +173,7 @@ def test_legacy_factories_delegate():
 
 
 # ------------------------------------------------------- checkpoint resume
+@pytest.mark.slow
 def test_trainer_checkpoint_save_and_resume(tmp_path):
     import jax
     import numpy as np
@@ -200,3 +201,65 @@ def test_trainer_checkpoint_save_and_resume(tmp_path):
     # a state-shaping field may NOT change across a resume
     with pytest.raises(ValueError, match="different experiment config"):
         Trainer(cfg.with_(rounds=6, hidden=32), data=data).run()
+
+
+@pytest.mark.slow
+def test_resume_restores_wall_clock_baseline(tmp_path):
+    """Post-restore history entries must continue the restored wall clock:
+    'seconds' stays monotonic across the resume boundary instead of
+    resetting to ~0."""
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = TINY.with_(rounds=2, eval_every=1, ckpt_dir=str(tmp_path))
+    res = Trainer(cfg, data=data).run()
+    assert len(res.history) == 2
+    res2 = Trainer(cfg.with_(rounds=4), data=data).run()
+    secs = [h["seconds"] for h in res2.history]
+    assert [h["round"] for h in res2.history] == [1, 2, 3, 4]
+    assert all(a <= b for a, b in zip(secs, secs[1:])), secs
+    # the first post-resume entry includes the restored elapsed time
+    assert secs[2] >= secs[1]
+    sidecar = json.loads((tmp_path / "state_00000004.json").read_text())
+    assert sidecar["elapsed_seconds"] >= secs[-1] > 0.0
+
+
+def test_rounds_zero_is_eval_only(tmp_path):
+    """rounds == 0 must not crash on the missing loss: the run evaluates the
+    initial parameters and reports a single history entry."""
+    import math
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    res = Trainer(TINY.with_(rounds=0), data=data).run()
+    assert res.rounds_run == 0
+    assert len(res.history) == 1
+    assert res.history[0]["round"] == 0
+    assert math.isnan(res.history[0]["loss"])
+    assert 0.0 <= res.history[0]["val_acc"] <= 1.0
+
+
+def test_resume_landing_on_final_round_does_not_crash(tmp_path):
+    """A resume that fast-forwards exactly to cfg.rounds runs zero new
+    rounds; st.last_losses is None and the final history entry must already
+    exist (no duplicate, no crash)."""
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = TINY.with_(rounds=2, ckpt_dir=str(tmp_path))
+    Trainer(cfg, data=data).run()
+    res = Trainer(cfg, data=data).run()    # resumes at round 2 == rounds
+    assert res.rounds_run == 2
+    assert [h["round"] for h in res.history] == [2]
+
+
+def test_final_history_entry_when_stopped_between_cadences():
+    """A hook stopping the run off the eval cadence still yields a final
+    history entry for the round the run actually stopped at."""
+    from repro.api.trainer import Hook
+
+    class StopAtRound1(Hook):
+        def on_round_end(self, trainer, metrics):
+            if trainer.state.round >= 1:
+                trainer.state.should_stop = True
+
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = TINY.with_(rounds=4, eval_every=10)
+    res = Trainer(cfg, data=data, hooks=[StopAtRound1()]).run()
+    assert res.rounds_run == 1
+    assert res.history[-1]["round"] == 1
+    assert res.history[-1]["loss"] == res.history[-1]["loss"]  # not NaN

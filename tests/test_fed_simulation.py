@@ -3,6 +3,7 @@ runtime AND with the byte meter — three implementations of the same algebra.""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import glasu
 from repro.core.glasu import GlasuConfig
@@ -25,6 +26,7 @@ def _setup(m=3, agg_layers=(1, 3)):
     return mcfg, sampler, params, batch
 
 
+@pytest.mark.slow
 def test_simulation_matches_vmapped_runtime():
     cfg, _, params, batch = _setup()
     want, _ = glasu.joint_inference(params, batch, cfg)

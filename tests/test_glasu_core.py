@@ -76,6 +76,7 @@ def test_dp_noise_changes_aggregate():
     assert float(jnp.max(jnp.abs(logits - logits_dp))) > 1e-3
 
 
+@pytest.mark.slow
 def test_fedbcd_special_case_no_graph():
     """§3.5: with A(E_m) = I (no edges) GLASU reduces to FedBCD — the layer
     aggregation sees only the self loop."""
@@ -172,6 +173,7 @@ def test_centralized_equals_m1():
     assert cdata.clients[0].n_edges == data.full.n_edges
 
 
+@pytest.mark.slow
 def test_label_at_one_client_gradient_equivalence():
     """Appendix B.2 eq.(3): the broadcast-gradient surrogate gives every
     non-owner client EXACTLY the gradient of the owner's end-to-end loss."""
@@ -210,6 +212,7 @@ def test_label_at_one_client_gradient_equivalence():
                                    rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_label_at_one_client_trains():
     data = make_vfl_dataset("tiny", n_clients=3, seed=0)
     d_in = max(c.feat_dim for c in data.clients)
@@ -223,12 +226,35 @@ def test_label_at_one_client_trains():
     assert res.test_acc > 0.5
 
 
-def test_pallas_backed_gcn_matches_jnp():
-    """use_pallas=True swaps the client sub-layer onto the fused graph_agg
-    kernel; joint inference must match the pure-jnp path."""
-    _, cfg, _, params, batch = _setup(backbone="gcn")
+@pytest.mark.parametrize("backbone", ["gcn", "gcnii", "gat"])
+def test_pallas_backed_backbone_matches_jnp(backbone):
+    """use_pallas=True swaps the client sub-layer onto the fused Pallas
+    kernels for ALL three paper backbones; joint inference must match the
+    pure-jnp path."""
+    _, cfg, _, params, batch = _setup(backbone=backbone)
     cfg_k = GlasuConfig(**{**cfg.__dict__, "use_pallas": True})
     logits, _ = glasu.joint_inference(params, batch, cfg)
     logits_k, _ = glasu.joint_inference(params, batch, cfg_k)
     np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_k),
                                rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backbone", ["gcn", "gcnii", "gat"])
+def test_pallas_backed_training_round_matches_jnp(backbone):
+    """A full training round (JointInference + LocalUpdate gradients) through
+    the fused kernels stays on the jnp trajectory — the custom_vjp backward
+    is exact up to float32 reassociation."""
+    _, cfg, _, params, batch = _setup(backbone=backbone)
+    cfg_k = GlasuConfig(**{**cfg.__dict__, "use_pallas": True})
+    opt = opt_lib.sgd(0.05)              # sgd: no adaptive noise amplification
+    state = opt.init(params)
+    p_j, _, loss_j = glasu.make_round_fn(cfg, opt)(
+        params, state, batch, jax.random.PRNGKey(0))
+    p_k, _, loss_k = glasu.make_round_fn(cfg_k, opt)(
+        params, state, batch, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(loss_j), np.asarray(loss_k),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_j), jax.tree.leaves(p_k)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)

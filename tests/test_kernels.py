@@ -18,6 +18,8 @@ from repro.kernels.graph_agg import graph_agg_pallas
     (300, 128, 4, 64, 32),
     (512, 200, 8, 128, 64),     # non-multiple of 128 dst
     (1000, 384, 3, 96, 48),
+    (256, 77, 5, 96, 192),      # tiled d_out (> DOUT_BLOCK), ragged dst
+    (256, 130, 5, 64, 320),     # tiled d_out, non-multiple-of-128 tiles
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32])
 def test_graph_agg_matches_ref(n_src, n_dst, fanout, d, d_out, dtype):
@@ -32,6 +34,93 @@ def test_graph_agg_matches_ref(n_src, n_dst, fanout, d, d_out, dtype):
                                rtol=2e-5, atol=2e-5)
 
 
+# --------------------------------------------------- fused backbone kernels
+@pytest.mark.parametrize("n_src,n_dst,fanout1,d", [
+    (64, 32, 5, 16),
+    (300, 130, 4, 64),          # non-multiple-of-128 dst
+    (256, 77, 5, 160),          # tiled d_out (d > DOUT_BLOCK)
+])
+def test_gcnii_kernel_matches_ref(n_src, n_dst, fanout1, d):
+    from repro.kernels.graph_agg import gcnii_layer_pallas
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.normal(size=(n_src, d)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(n_src, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, fanout1)), jnp.int32)
+    mask = jnp.asarray(rng.random((n_dst, fanout1)) < 0.8, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    got = gcnii_layer_pallas(h, h0, idx, mask, w, b, alpha=0.1, beta=0.5,
+                             interpret=True)
+    want = ref.gcnii_layer_ref(h, h0, idx, mask, w, b, 0.1, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n_src,n_dst,fanout1,d,heads,dh", [
+    (64, 32, 5, 16, 2, 8),
+    (300, 130, 4, 64, 2, 32),   # non-multiple-of-128 dst
+    (256, 77, 5, 96, 4, 16),    # 4 heads
+    (200, 129, 9, 48, 1, 64),   # single head, wide fanout
+])
+def test_gat_kernel_matches_ref(n_src, n_dst, fanout1, d, heads, dh):
+    from repro.kernels.graph_agg import gat_layer_pallas
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(size=(n_src, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n_src, size=(n_dst, fanout1)), jnp.int32)
+    mask = np.asarray(rng.random((n_dst, fanout1)) < 0.8, np.float32)
+    mask[:, 0] = 1.0                                   # self loop always on
+    mask = jnp.asarray(mask)
+    w = jnp.asarray(rng.normal(size=(d, heads, dh)) * 0.2, jnp.float32)
+    a_src = jnp.asarray(rng.normal(size=(heads, dh)) * 0.1, jnp.float32)
+    a_dst = jnp.asarray(rng.normal(size=(heads, dh)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(heads * dh,)), jnp.float32)
+    got = gat_layer_pallas(h, idx, mask, w, a_src, a_dst, b, interpret=True)
+    want = ref.gat_layer_ref(h, idx, mask, w, a_src, a_dst, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ops_gradients_match_ref():
+    """Training differentiates through the fused layers — the custom_vjp
+    (Pallas forward, ref backward) must match end-to-end ref gradients."""
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, size=(40, 5)), jnp.int32)
+    mask = jnp.asarray(rng.random((40, 5)) < 0.8, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+
+    g1 = jax.grad(lambda h, w: jnp.sum(ops.graph_agg(h, idx, mask, w) ** 2)
+                  )(h, w)
+    g2 = jax.grad(lambda h, w: jnp.sum(ref.graph_agg_ref(h, idx, mask, w) ** 2)
+                  )(h, w)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-5, atol=2e-5)
+
+    g1 = jax.grad(lambda h, w: jnp.sum(ops.gcnii_layer(
+        h, h0, idx, mask, w, b, alpha=0.1, beta=0.5) ** 2))(h, w)
+    g2 = jax.grad(lambda h, w: jnp.sum(ref.gcnii_layer_ref(
+        h, h0, idx, mask, w, b, 0.1, 0.5) ** 2))(h, w)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-5, atol=2e-5)
+
+    wg = jnp.asarray(rng.normal(size=(16, 2, 8)) * 0.2, jnp.float32)
+    a_src = jnp.asarray(rng.normal(size=(2, 8)) * 0.1, jnp.float32)
+    a_dst = jnp.asarray(rng.normal(size=(2, 8)) * 0.1, jnp.float32)
+    bg = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    g1 = jax.grad(lambda h, w: jnp.sum(ops.gat_layer(
+        h, idx, mask, w, a_src, a_dst, bg) ** 2))(h, wg)
+    g2 = jax.grad(lambda h, w: jnp.sum(ref.gat_layer_ref(
+        h, idx, mask, w, a_src, a_dst, bg) ** 2))(h, wg)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(n_src=st.integers(8, 200), n_dst=st.integers(1, 150),
        fanout=st.integers(1, 6), d=st.sampled_from([8, 24, 64]),
@@ -110,6 +199,7 @@ def test_flash_dtypes(dtype):
     assert got.dtype == dtype
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(s=st.integers(16, 257), h=st.sampled_from([1, 2, 4]),
        g=st.sampled_from([1, 2]), dh=st.sampled_from([16, 32]),

@@ -58,6 +58,7 @@ def test_moe_capacity_drops_counted():
     assert float(stats.dropped_frac) > 0.0
 
 
+@pytest.mark.slow
 def test_moe_gradients_flow_to_all_parts():
     rng = np.random.default_rng(4)
     p = moe_lib.moe_init(jax.random.PRNGKey(2), 16, 32, 4, 1, 32)
@@ -73,6 +74,7 @@ def test_moe_gradients_flow_to_all_parts():
         assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves), name
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(t=st.integers(4, 40), e=st.sampled_from([2, 4, 8]),
        k=st.sampled_from([1, 2]), seed=st.integers(0, 1000))

@@ -1,0 +1,165 @@
+"""Statistical + structural sampler tests for the vectorized fast path and
+the two bias fixes (truncation order, bounded neighbor draw)."""
+import numpy as np
+import pytest
+
+from repro.graph.graph import Graph, edges_to_csr
+from repro.graph.sampler import GlasuSampler, SamplerConfig, _padded_tables
+from repro.graph.synth import make_vfl_dataset
+
+
+def _star_graph(n_leaves: int, extra_feat: int = 4) -> Graph:
+    """Node 0 connected to nodes 1..n_leaves."""
+    edges = np.stack([np.zeros(n_leaves, np.int64),
+                      np.arange(1, n_leaves + 1)], axis=1)
+    n = n_leaves + 1
+    indptr, indices = edges_to_csr(n, edges)
+    rng = np.random.default_rng(0)
+    return Graph(n, indptr, indices,
+                 rng.normal(size=(n, extra_feat)).astype(np.float32),
+                 np.zeros(n, np.int32), np.arange(n), np.arange(n),
+                 np.arange(n))
+
+
+def _tiny_sampler(seed=0, **kw):
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = SamplerConfig(n_layers=4, agg_layers=(1, 3), batch_size=8,
+                        fanout=3, size_cap=96, **kw)
+    return GlasuSampler(data, cfg, seed=seed)
+
+
+# ------------------------------------------------------------ bias fixes
+def test_build_set_truncation_is_unbiased():
+    """Pre-fix, _build_set kept the lowest candidate ids under truncation —
+    high-id neighbors were dropped in every round. Post-fix every candidate
+    must survive at a roughly uniform rate."""
+    s = _tiny_sampler()
+    n_cand = 200
+    size = 110                           # 10 centers + room for 100 of 200
+    centers = np.arange(10, dtype=np.int32)
+    others = np.arange(10, 10 + n_cand, dtype=np.int32)
+    counts = np.zeros(10 + n_cand)
+    trials = 400
+    for _ in range(trials):
+        out = s._build_set([centers], [others.reshape(1, -1)], size)
+        kept = out[out >= 0]
+        counts[kept] += 1
+    # centers never dropped
+    assert np.all(counts[:10] == trials)
+    keep_rate = counts[10:] / trials     # expected 100/200 = 0.5 each
+    assert keep_rate.mean() == pytest.approx(0.5, abs=0.01)
+    # the seed behavior pins the top half at 0.0 and the bottom at 1.0
+    assert keep_rate.min() > 0.3
+    assert keep_rate.max() < 0.7
+    # high-id half survives as often as the low-id half (seed: 0 vs 1)
+    lo, hi = keep_rate[:n_cand // 2].mean(), keep_rate[n_cand // 2:].mean()
+    assert abs(lo - hi) < 0.05
+
+
+def test_neighbor_draw_is_uniform():
+    """The bounded per-row draw must hit every neighbor of a node at a
+    uniform rate (and only actual neighbors)."""
+    deg = 7                              # not a power of two
+    g = _star_graph(deg)
+    data = make_vfl_dataset("tiny", n_clients=1, seed=0)
+    data.clients[0] = g
+    data = type(data)(data.name, [g], g)
+    cfg = SamplerConfig(n_layers=2, agg_layers=(1,), batch_size=4, fanout=3,
+                        size_cap=32, table_cap=16)
+    s = GlasuSampler(data, cfg, seed=1)
+    centers = np.zeros(64, np.int32)     # node 0, deg 7
+    counts = np.zeros(deg + 1)
+    trials = 200
+    for _ in range(trials):
+        nb = s._sample_neighbors(0, centers)
+        assert nb.min() >= 1 and nb.max() <= deg   # neighbors only
+        counts += np.bincount(nb.ravel(), minlength=deg + 1)
+    freq = counts[1:] / counts[1:].sum()           # expected 1/7 each
+    assert np.all(np.abs(freq - 1 / deg) < 0.01)
+
+
+def test_sampler_reproducible_under_seed():
+    a, b = _tiny_sampler(seed=7), _tiny_sampler(seed=7)
+    for _ in range(3):
+        ba, bb = a.sample_round(), b.sample_round()
+        for xa, xb in zip(ba.gather_idx, bb.gather_idx):
+            np.testing.assert_array_equal(xa, xb)
+        for xa, xb in zip(ba.gather_mask, bb.gather_mask):
+            np.testing.assert_array_equal(xa, xb)
+        np.testing.assert_array_equal(ba.labels, bb.labels)
+        np.testing.assert_array_equal(ba.feats, bb.feats)
+
+
+# ------------------------------------------------- vectorized table build
+def test_padded_tables_keeps_all_neighbors_under_cap():
+    data = make_vfl_dataset("tiny", n_clients=2, seed=1)
+    g = data.clients[0]
+    cap = int(np.diff(g.indptr).max()) + 1      # nothing truncated
+    table, deg = _padded_tables(g, cap, np.random.default_rng(0))
+    for i in range(g.n_nodes):
+        want = set(map(int, g.neighbors(i)))
+        got = set(map(int, table[i, :deg[i]]))
+        assert got == want
+        assert np.all(table[i, deg[i]:] == -1)
+
+
+def test_padded_tables_hub_subsample_uniform_without_replacement():
+    deg, cap = 100, 10
+    g = _star_graph(deg)
+    counts = np.zeros(deg + 1)
+    trials = 300
+    for t in range(trials):
+        table, d = _padded_tables(g, cap, np.random.default_rng(t))
+        row = table[0, :cap]
+        assert d[0] == cap
+        assert len(set(row.tolist())) == cap     # without replacement
+        assert row.min() >= 1
+        counts += np.bincount(row, minlength=deg + 1)
+    rate = counts[1:] / trials                   # expected cap/deg = 0.1
+    assert rate.mean() == pytest.approx(cap / deg, abs=0.01)
+    assert rate.min() > 0.02 and rate.max() < 0.25
+
+
+def test_padded_neighbor_table_vectorized_structure():
+    data = make_vfl_dataset("tiny", n_clients=2, seed=2)
+    g = data.full
+    idx, mask = g.padded_neighbor_table(8, np.random.default_rng(0))
+    deg = np.minimum(np.diff(g.indptr), 8)
+    np.testing.assert_array_equal(mask.sum(axis=1), deg + 1)  # self + nbrs
+    np.testing.assert_array_equal(idx[:, 0], np.arange(g.n_nodes))
+    for i in range(0, g.n_nodes, 37):
+        nbrs = set(map(int, g.neighbors(i)))
+        got = idx[i, 1:][mask[i, 1:] > 0]
+        assert set(map(int, got)) <= nbrs
+
+
+# ------------------------------------------------------- scratch + lookup
+def test_sample_round_reuses_scratch_buffers():
+    s = _tiny_sampler()
+    b1 = s.sample_round()
+    b2 = s.sample_round()
+    for a, b in zip(b1.gather_idx, b2.gather_idx):
+        assert a is b                    # same buffer, overwritten in place
+    assert b1.feats is b2.feats
+
+
+def test_positions_matches_searchsorted_reference():
+    s = _tiny_sampler()
+    rng = np.random.default_rng(3)
+    node_set = np.full(64, -1, np.int32)
+    ids = rng.choice(s.data.n_nodes, size=40, replace=False).astype(np.int32)
+    node_set[:40] = ids
+    query = rng.integers(0, s.data.n_nodes, size=(17, 5)).astype(np.int32)
+    query[0, 0] = -1
+    got = s._positions(node_set, query)
+
+    order = np.argsort(node_set, kind="stable")
+    ss = node_set[order]
+    q = query.ravel()
+    loc = np.clip(np.searchsorted(ss, q), 0, len(ss) - 1)
+    hit = (ss[loc] == q) & (q >= 0)
+    want = np.where(hit, order[loc], -1).reshape(query.shape)
+    np.testing.assert_array_equal(got, want)
+    # lookup table left clean for the next call
+    assert np.all(s._pos_lut == -1)
+    assert np.all(s._mark == 0)
