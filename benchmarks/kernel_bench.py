@@ -319,10 +319,48 @@ def _bench_sampler(rounds: int = 5):
         "vectorized sampler must deliver >= 5x seed cold-start throughput"
 
 
+def _bench_sampler_allocs(rounds: int = 10):
+    """Steady-state host allocation per ``sample_round``.
+
+    The vectorized sampler reuses per-layer index/mask/query scratch, an
+    int32 id->position LUT, and the feature buffer across rounds; only
+    transient draw/dedup temporaries should allocate. Gate: tracemalloc
+    peak across ``rounds`` steady-state rounds must stay under the seed
+    sampler's (which reallocates every per-layer block, the gather query,
+    and the feature matrix each round)."""
+    import tracemalloc
+
+    spec = DatasetSpec(n_nodes=10_000, avg_deg=60.0, feat_dim=64, n_classes=8)
+    data = make_vfl_dataset("synth10k", n_clients=3, seed=0, spec=spec)
+    scfg = SamplerConfig(n_layers=4, agg_layers=(1, 3), batch_size=64,
+                         fanout=3, size_cap=512, table_cap=32)
+
+    def peak_bytes(sampler):
+        sampler.sample_round()                  # steady state, not cold
+        tracemalloc.start()
+        for _ in range(rounds):
+            sampler.sample_round()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        return peak
+
+    new_peak = peak_bytes(GlasuSampler(data, scfg, seed=0))
+    seed_peak = peak_bytes(_SeedSampler(data, scfg, seed=0))
+    print(f"sampler/alloc_peak_10rounds,{new_peak / 1e6:.2f}MB,"
+          f"seed_MB={seed_peak / 1e6:.2f},"
+          f"ratio={new_peak / max(seed_peak, 1):.2f}")
+    assert new_peak < seed_peak, \
+        "scratch-reusing sampler must allocate less per round than the seed"
+    lut = GlasuSampler(data, scfg, seed=0)._pos_lut
+    assert lut.dtype == np.int32, \
+        f"position LUT should be int32 (positions < size_cap), got {lut.dtype}"
+
+
 def run():
     _bench_graph_agg()
     _bench_backbone_parity()
     _bench_sampler()
+    _bench_sampler_allocs()
 
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)

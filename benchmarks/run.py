@@ -30,6 +30,10 @@ def main() -> None:
     if args.skip_gnn:
         return
 
+    from . import train_bench
+    print("# train loop (scanned engine vs per-round)")
+    train_bench.run(smoke=not args.full)
+
     from . import (accuracy_parity, backbones, client_scaling, comm_model,
                    lazy_aggregation, stale_updates)
     from .common import BenchSettings

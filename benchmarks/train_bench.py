@@ -1,0 +1,179 @@
+"""Training-loop throughput: scanned multi-round engine vs per-round loop.
+
+Measures end-to-end rounds/sec of the vmapped backend at the paper's
+hot-path shapes (cora profile: L=4 GCNII, hidden 64, batch 16, fanout 3,
+size_cap 512, M=3) for three drivers:
+
+  per_round — the historical Trainer loop: serial host sampling, a
+              full-batch ``jnp.array`` copy, one jit dispatch per round;
+  scan_K    — the device-resident engine: K pre-sampled rounds stacked and
+              advanced by one ``lax.scan`` dispatch with donated
+              params/opt_state, sampling prefetched on a worker thread
+              (K ∈ {1, 8, 32}).
+
+Gate (full mode): scan_8 must be strictly faster than per_round. Results
+are appended to ``BENCH_train.json`` so the wall-clock trajectory
+accumulates per PR; ``--smoke`` runs a tiny shape for CI signal (no perf
+gate — shared CI boxes are too noisy to gate on) but still exercises every
+driver and writes the JSON artifact.
+
+Run: ``PYTHONPATH=src python -m benchmarks.train_bench [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExperimentConfig
+from repro.api.backends import make_backend
+from repro.core import glasu
+from repro.graph.prefetch import PrefetchSampler
+from repro.graph.sampler import GlasuSampler
+from repro.graph.synth import make_vfl_dataset
+
+HOT = dict(dataset="cora", n_clients=3, n_layers=4, hidden=64,
+           backbone="gcnii", batch_size=16, fanout=3, size_cap=512)
+SMOKE = dict(dataset="tiny", n_clients=3, n_layers=4, hidden=16,
+             backbone="gcnii", batch_size=8, fanout=3, size_cap=96)
+
+
+def _setup(shape):
+    cfg = ExperimentConfig(name="train-bench", rounds=0, **shape)
+    data = make_vfl_dataset(cfg.dataset, n_clients=cfg.n_clients,
+                            seed=cfg.seed)
+    mcfg = cfg.glasu_config(data)
+    optimizer = cfg.make_optimizer()
+    sampler = GlasuSampler(data, cfg.sampler_config(), seed=cfg.seed)
+    backend = make_backend("vmapped")
+    backend.bind(mcfg, optimizer, sampler)
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    opt_state = optimizer.init(params)
+    return data, cfg, mcfg, optimizer, sampler, backend, params, opt_state
+
+
+def _per_round_loop(shape, rounds):
+    """The pre-engine Trainer loop, reproduced as the baseline."""
+    _, cfg, mcfg, _, sampler, backend, params, opt_state = _setup(shape)
+    key = jax.random.PRNGKey(0)
+    # warmup: compile the round fn outside the timed region
+    batch = jax.tree.map(jnp.array, sampler.sample_round())
+    out = backend.run_round(params, opt_state, batch, key)
+    jax.block_until_ready(out.losses)
+    params, opt_state = out.params, out.opt_state
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        batch = jax.tree.map(jnp.array, sampler.sample_round())
+        out = backend.run_round(params, opt_state, batch,
+                                jax.random.fold_in(key, t))
+        params, opt_state = out.params, out.opt_state
+    jax.block_until_ready(out.losses)
+    return rounds / (time.perf_counter() - t0)
+
+
+def _scan_loop(shape, rounds, k):
+    """The device-resident engine at rounds_per_step=k."""
+    assert rounds % k == 0
+    _, cfg, mcfg, _, sampler, backend, params, opt_state = _setup(shape)
+    key = jax.random.PRNGKey(0)
+    fold_keys = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
+    schedule = [k] * (rounds // k + 1)          # +1 warmup step
+    prefetch = PrefetchSampler(sampler, schedule, n_buffers=2)
+    try:
+        step = prefetch.get()                   # warmup: compile
+        keys = fold_keys(key, jnp.arange(k))
+        out = backend.run_step(params, opt_state,
+                               jax.device_put(step.data), keys)
+        jax.block_until_ready(out.losses)
+        params, opt_state = out.params, out.opt_state
+        prefetch.retire(step, out.losses)
+        t0 = time.perf_counter()
+        t = k
+        for _ in range(rounds // k):
+            step = prefetch.get()
+            keys = fold_keys(key, jnp.arange(t, t + k))
+            out = backend.run_step(params, opt_state,
+                                   jax.device_put(step.data), keys)
+            params, opt_state = out.params, out.opt_state
+            prefetch.retire(step, out.losses)
+            t += k
+        jax.block_until_ready(out.losses)
+        return rounds / (time.perf_counter() - t0)
+    finally:
+        prefetch.close()
+
+
+def run(smoke: bool = False, out_path: str = "BENCH_train.json",
+        rounds: int = None, reps: int = None):
+    shape = SMOKE if smoke else HOT
+    ks = (1, 8, 32)
+    rounds = rounds or (32 if smoke else 96)
+    rounds = ((rounds + 31) // 32) * 32         # round up to an lcm(ks) multiple
+    reps = reps or (1 if smoke else 4)
+    # Interleaved reps: each rep measures every driver back-to-back, so a
+    # load spike hits neighbours, not one driver; best-of-reps is the
+    # least-noise estimate per driver (kernel_bench's min-time rationale)
+    # and the gate compares scan_8/per_round WITHIN a rep (paired windows).
+    samples = {"per_round": []}
+    samples.update({f"scan_{k}": [] for k in ks})
+    for _ in range(reps):
+        samples["per_round"].append(_per_round_loop(shape, rounds))
+        for k in ks:
+            samples[f"scan_{k}"].append(_scan_loop(shape, rounds, k))
+    results = {d: max(v) for d, v in samples.items()}
+    paired = max(s / p for s, p in zip(samples["scan_8"],
+                                       samples["per_round"]))
+    print(f"train/per_round,{results['per_round']:.2f}rounds/s,baseline")
+    for k in ks:
+        print(f"train/scan_k{k},{results[f'scan_{k}']:.2f}rounds/s,"
+              f"speedup_vs_per_round="
+              f"{results[f'scan_{k}'] / results['per_round']:.2f}x")
+    print(f"train/scan_k8_paired_speedup,{paired:.2f}x,best_paired_rep")
+
+    entry = {
+        "bench": "train", "smoke": smoke, "rounds_timed": rounds,
+        "reps": reps, "shape": shape, "rounds_per_sec": results,
+        "speedup_scan8_vs_per_round": results["scan_8"] / results["per_round"],
+        "paired_speedup_scan8": paired,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    path = Path(out_path)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except (json.JSONDecodeError, ValueError):
+            history = []
+    if not isinstance(history, list):
+        history = [history]
+    history.append(entry)
+    path.write_text(json.dumps(history, indent=1))
+    print(f"train/bench_json,{path},entries={len(history)}")
+
+    if not smoke:
+        assert paired > 1.0, (
+            f"scanned engine (K=8) must beat the per-round loop in at least "
+            f"one paired measurement window; best paired speedup {paired:.3f}"
+            f" (best-of per driver: scan_8 {results['scan_8']:.2f} r/s vs "
+            f"per_round {results['per_round']:.2f} r/s)")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, no perf gate (CI)")
+    ap.add_argument("--out", default="BENCH_train.json")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out, rounds=args.rounds,
+        reps=args.reps)
+
+
+if __name__ == "__main__":
+    main()

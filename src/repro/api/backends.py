@@ -13,9 +13,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Optional, Protocol, runtime_checkable
 
+import jax.numpy as jnp
+
 from ..core import glasu
 from ..core.glasu import GlasuConfig
 from ..fed import simulation
+from ..graph.prefetch import unstack_round
 from ..graph.sampler import GlasuSampler, SampledBatch
 from ..optim import optimizers as opt_lib
 
@@ -28,6 +31,16 @@ class RoundResult:
     losses: Any                                   # (Q,) per-microstep losses
     comm_bytes: int                               # bytes this round
     message_log: Optional[simulation.MessageLog] = None
+
+
+@dataclass
+class StepResult:
+    """Output of one multi-round step (K rounds in one dispatch)."""
+    params: Any
+    opt_state: Any
+    losses: Any                                   # (K, Q) per-round rows
+    comm_bytes_round: int                         # bytes per round (analytic)
+    message_logs: Optional[list] = None           # per-round, simulation only
 
 
 @runtime_checkable
@@ -45,9 +58,46 @@ class Backend(Protocol):
                   key) -> RoundResult:
         ...
 
+    def run_step(self, params, opt_state, batches: SampledBatch,
+                 keys) -> StepResult:
+        """K rounds in one call; ``batches``/``keys`` carry a leading round
+        axis. params/opt_state may be donated — callers treat them as
+        consumed."""
+        ...
+
     def joint_logits(self, params, batch: SampledBatch, key=None):
         """JointInference logits (M, S, C) — the cross-backend parity probe."""
         ...
+
+
+def run_step_sequential(backend, params, opt_state, batches: SampledBatch,
+                        keys) -> StepResult:
+    """K sequential ``run_round`` calls presented as one step.
+
+    Used by ``SimulationBackend`` (message fidelity over throughput) and as
+    the Trainer's fallback for backends written against the older
+    run_round-only protocol. ``StepResult`` carries ONE per-round byte
+    count, so a backend whose rounds diverge raises loudly instead of
+    letting ``CommMeterHook`` mis-accumulate.
+    """
+    losses, logs = [], []
+    comm = None
+    for i in range(len(keys)):
+        out = backend.run_round(params, opt_state,
+                                unstack_round(batches, i), keys[i])
+        params, opt_state = out.params, out.opt_state
+        losses.append(out.losses)
+        logs.append(out.message_log)
+        if comm is None:
+            comm = out.comm_bytes
+        elif out.comm_bytes != comm:
+            raise RuntimeError(
+                "per-round byte counts diverged within a multi-round step; "
+                "run this backend with rounds_per_step=1")
+    return StepResult(params, opt_state, jnp.stack(losses),
+                      comm if comm is not None else 0,
+                      message_logs=logs if any(l is not None for l in logs)
+                      else None)
 
 
 def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler) -> int:
@@ -58,19 +108,29 @@ def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler) -> int:
 
 
 class VmappedBackend:
-    """Stacked-axis fast path: one jitted round_fn, analytic byte meter."""
+    """Stacked-axis fast path: one jitted scanned step_fn (K rounds per
+    dispatch, donated params/opt_state), analytic byte meter."""
 
     name = "vmapped"
 
     def bind(self, model_cfg, optimizer, sampler):
         self.cfg = model_cfg
-        self.round_fn = glasu.make_round_fn(model_cfg, optimizer)
+        self.optimizer = optimizer
         self.bytes_per_round = _analytic_bytes(model_cfg, sampler)
+        self.step_fn = glasu.make_multi_round_fn(model_cfg, optimizer)
+        self._round_fn = None                 # built lazily for run_round
 
     def run_round(self, params, opt_state, batch, key):
-        params, opt_state, losses = self.round_fn(params, opt_state, batch,
-                                                  key)
+        if self._round_fn is None:
+            self._round_fn = glasu.make_round_fn(self.cfg, self.optimizer)
+        params, opt_state, losses = self._round_fn(params, opt_state, batch,
+                                                   key)
         return RoundResult(params, opt_state, losses, self.bytes_per_round)
+
+    def run_step(self, params, opt_state, batches, keys):
+        params, opt_state, losses = self.step_fn(params, opt_state, batches,
+                                                 keys)
+        return StepResult(params, opt_state, losses, self.bytes_per_round)
 
     def joint_logits(self, params, batch, key=None):
         logits, _ = glasu.joint_inference(params, batch, self.cfg, key)
@@ -104,6 +164,11 @@ class SimulationBackend:
                 f"but the sampler cost model predicts {self.bytes_per_round} B")
         comm = measured if self.cfg.n_clients > 1 else 0
         return RoundResult(params, opt_state, losses, comm, message_log=log)
+
+    def run_step(self, params, opt_state, batches, keys):
+        """Sequential replay: the simulation path is about message fidelity,
+        not throughput, so a step is literally K audited rounds."""
+        return run_step_sequential(self, params, opt_state, batches, keys)
 
     def joint_logits(self, params, batch, key=None):
         logits, _ = simulation.simulate_joint_inference(params, batch,

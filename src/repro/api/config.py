@@ -73,6 +73,8 @@ class ExperimentConfig:
     table_cap: int = 64
     # ------------------------------------------------------------- training
     rounds: int = 200
+    rounds_per_step: int = 1              # K rounds per scanned device step
+    prefetch_buffers: int = 2             # sampler prefetch generations
     lr: float = 0.01
     optimizer: str = "adam"
     eval_every: int = 25
@@ -102,6 +104,10 @@ class ExperimentConfig:
             err("n_local_steps (Q) must be >= 1")
         if self.rounds < 0:
             err("rounds must be >= 0")   # 0 = eval-only run
+        if self.rounds_per_step < 1:
+            err("rounds_per_step must be >= 1")
+        if self.prefetch_buffers < 1:
+            err("prefetch_buffers must be >= 1")
         if self.agg not in ("mean", "concat"):
             err(f"unknown aggregation {self.agg!r}")
         if self.agg == "concat" and self.backbone != "gcn":

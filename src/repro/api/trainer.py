@@ -8,23 +8,66 @@ behavior exactly; callers append their own for logging, sweeps, etc.
 
     cfg = get_preset("cora-gcnii-glasu")
     result = Trainer(cfg).run()
+
+The loop itself is a device-resident round engine: ``cfg.rounds_per_step``
+rounds advance per jitted dispatch (``lax.scan`` over round-stacked
+batches, donated parameter/optimizer buffers) and host-side sampling runs
+in a background prefetch thread overlapped with device compute. For the
+built-in hooks — and any hook that acts on eval/checkpoint cadence
+boundaries — the engine is bit-identical to the historical per-round loop
+at every ``rounds_per_step`` (see ``step_schedule``). A custom hook that
+inspects ``state.params`` or requests a stop on a round OFF those
+cadences sees end-of-step state: the K rounds of a step are one device
+dispatch, so mid-step stops take effect once the already-computed step
+finishes (up to K-1 rounds later than the per-round loop).
 """
 from __future__ import annotations
 
+import copy
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core import checkpoint, glasu
 from ..core.train import TrainResult, _eval_tables, make_centralized_dataset
+from ..graph.prefetch import PrefetchSampler
 from ..graph.sampler import GlasuSampler
 from ..graph.synth import make_vfl_dataset
 from .backends import Backend, make_backend
 from .config import ExperimentConfig
+
+
+# (K,) per-round keys in ONE dispatch — K sequential fold_in calls would
+# hand back a chunk of the per-round host overhead the scan removes
+_fold_keys = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
+
+
+def step_schedule(start: int, rounds: int, rounds_per_step: int,
+                  cadences: Tuple[int, ...] = ()) -> List[int]:
+    """Step sizes covering rounds (start, rounds], cut at cadence boundaries.
+
+    Every multiple of every (non-zero) cadence — eval_every, ckpt_every —
+    ends a step, so hooks that act on those rounds always see end-of-step
+    parameters and the multi-round engine is observationally identical to
+    the per-round loop for ANY cadence. Aligned cadences (multiples of
+    ``rounds_per_step``) keep the schedule uniform, which keeps the scanned
+    step function at a single trace; misaligned ones just add remainder
+    steps (extra traces, same results).
+    """
+    steps: List[int] = []
+    t = start
+    while t < rounds:
+        k = min(rounds_per_step, rounds - t)
+        for c in cadences:
+            if c:
+                k = min(k, (t // c + 1) * c - t)
+        steps.append(k)
+        t += k
+    return steps
 
 
 @dataclass
@@ -41,6 +84,7 @@ class TrainerState:
     t0: float = 0.0
     wall_seconds: float = 0.0
     last_losses: Any = None
+    sampler_rng_state: Optional[dict] = None   # after st.round rounds drawn
 
 
 class Hook:
@@ -92,9 +136,11 @@ class EvalHook(Hook):
         test = float(glasu.accuracy_from_logits(
             logits, data.full.labels, data.full.test_idx, mode))
         # no round has run yet (rounds == 0, or a resume landing exactly on
-        # cfg.rounds): there is no loss to report, not a crash
-        loss = (float(st.last_losses[-1]) if st.last_losses is not None
-                else float("nan"))
+        # cfg.rounds): there is no loss to report, not a crash. One
+        # device_get here — at eval cadence — is the only host sync the
+        # loss reporting pays; non-eval rounds never block on device.
+        loss = (float(jax.device_get(st.last_losses)[-1])
+                if st.last_losses is not None else float("nan"))
         entry = {"round": st.round, "loss": loss,
                  "val_acc": val, "test_acc": test,
                  "comm_bytes": st.comm_bytes,
@@ -143,7 +189,8 @@ class CheckpointHook(Hook):
     """
 
     RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
-                      "target_acc", "ckpt_every", "ckpt_dir")
+                      "target_acc", "ckpt_every", "ckpt_dir",
+                      "rounds_per_step", "prefetch_buffers")
 
     def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
         self.ckpt_dir = ckpt_dir
@@ -192,6 +239,14 @@ class CheckpointHook(Hook):
                                st.history[-1]["seconds"] if st.history
                                else 0.0)
             st.t0 = time.perf_counter() - elapsed
+            # new sidecars carry the sampler's exact bit-generator state at
+            # save time: restore it directly instead of the O(rounds)
+            # sample_round() replay (the Trainer falls back to replay for
+            # sidecars written before the field existed)
+            rng_state = loop.get("sampler_rng")
+            if rng_state is not None:
+                trainer.sampler.rng.bit_generator.state = rng_state
+                trainer.sampler_restored = True
         else:
             pathlib.Path(self.ckpt_dir).mkdir(parents=True, exist_ok=True)
             meta.write_text(json.dumps(trainer.cfg.to_dict(), indent=1))
@@ -203,7 +258,11 @@ class CheckpointHook(Hook):
         self._sidecar(st.round).write_text(json.dumps(
             {"comm_bytes": st.comm_bytes, "val_acc": st.val_acc,
              "test_acc": st.test_acc, "history": st.history,
-             "elapsed_seconds": time.perf_counter() - st.t0}))
+             "elapsed_seconds": time.perf_counter() - st.t0,
+             # exact resume point for the sampler stream: the generator bit
+             # state after st.round rounds were drawn (json handles the
+             # arbitrary-precision ints PCG64 carries)
+             "sampler_rng": st.sampler_rng_state}))
         checkpoint.cleanup(self.ckpt_dir, keep=self.keep)
         live = {int(f.stem.split("_")[1])
                 for f in pathlib.Path(self.ckpt_dir).glob("ckpt_*.npz")}
@@ -242,6 +301,20 @@ class Trainer:
             self.hooks.append(CheckpointHook(cfg.ckpt_dir, cfg.ckpt_every))
         self.hooks.extend(hooks)
         self.state = TrainerState()
+        # set by CheckpointHook when a sidecar restored the sampler's rng
+        # bit state directly (skips the O(rounds) replay loop on resume)
+        self.sampler_restored = False
+
+    def _run_step(self, params, opt_state, batches, keys):
+        """Dispatch one multi-round step; backends written against the
+        older run_round-only protocol fall back to K audited sequential
+        rounds (same helper the simulation backend uses)."""
+        run_step = getattr(self.backend, "run_step", None)
+        if run_step is not None:
+            return run_step(params, opt_state, batches, keys)
+        from .backends import run_step_sequential
+        return run_step_sequential(self.backend, params, opt_state,
+                                   batches, keys)
 
     @staticmethod
     def _make_data(cfg: ExperimentConfig):
@@ -252,6 +325,21 @@ class Trainer:
         return data
 
     def run(self) -> TrainResult:
+        """Drive the device-resident round engine.
+
+        Rounds advance in multi-round *steps*: ``cfg.rounds_per_step``
+        pre-sampled rounds are stacked on a leading axis and dispatched as
+        ONE jitted ``lax.scan`` (``Backend.run_step``) with params/opt_state
+        donated. The step schedule is cut at every eval/checkpoint cadence
+        boundary, so every hook that inspects ``state.params`` fires at a
+        step end and sees exactly what the per-round loop would have shown
+        it; mid-step rounds still dispatch ``on_round_end`` with their own
+        loss row and byte count. Sampling runs in a ``PrefetchSampler``
+        worker thread that fills round-stacked generation buffers while the
+        device computes the previous step (a hook requesting a stop
+        mid-step takes effect once the already-computed step finishes
+        dispatching its round metrics).
+        """
         cfg, st = self.cfg, self.state
         key = jax.random.PRNGKey(cfg.seed)
         st.params = glasu.init_params(key, self.model_cfg)
@@ -259,28 +347,53 @@ class Trainer:
         st.t0 = time.perf_counter()
         for h in self.hooks:
             h.on_train_start(self)          # CheckpointHook may fast-forward
-        for _ in range(st.round):
+        if st.round and not self.sampler_restored:
             # replay the consumed sampler stream so a resumed run sees the
-            # same batch sequence as an uninterrupted one
-            self.sampler.sample_round()
-        for t in range(st.round, cfg.rounds):
-            # jnp.array (copy) not jnp.asarray: on CPU the latter zero-copy
-            # aliases the sampler's reused scratch buffers, which the next
-            # sample_round overwrites while this round's async computation
-            # may still be reading them
-            batch = jax.tree.map(jnp.array, self.sampler.sample_round())
-            out = self.backend.run_round(st.params, st.opt_state, batch,
-                                         jax.random.fold_in(key, t))
-            st.params, st.opt_state = out.params, out.opt_state
-            st.last_losses = out.losses
-            st.round = t + 1
-            metrics = {"round": st.round, "losses": out.losses,
-                       "comm_bytes_round": out.comm_bytes,
-                       "message_log": out.message_log}
-            for h in self.hooks:
-                h.on_round_end(self, metrics)
-            if st.should_stop:
-                break
+            # same batch sequence as an uninterrupted one — fallback for
+            # sidecars that predate the persisted rng bit state
+            for _ in range(st.round):
+                self.sampler.sample_round()
+        st.sampler_rng_state = copy.deepcopy(
+            self.sampler.rng.bit_generator.state)
+        # every CheckpointHook's cadence cuts the schedule — a save must
+        # land on a step end so its sidecar's rng state matches st.round
+        ckpt_cadences = tuple(h.every for h in self.hooks
+                              if isinstance(h, CheckpointHook))
+        schedule = step_schedule(st.round, cfg.rounds, cfg.rounds_per_step,
+                                 (cfg.eval_every,) + ckpt_cadences)
+        prefetch = PrefetchSampler(self.sampler, schedule,
+                                   n_buffers=cfg.prefetch_buffers) \
+            if schedule else None
+        try:
+            t = st.round
+            for _ in schedule:
+                step = prefetch.get()
+                k = step.rounds
+                keys = _fold_keys(key, jnp.arange(t, t + k))
+                batches = jax.device_put(step.data)
+                out = self._run_step(st.params, st.opt_state, batches, keys)
+                st.params, st.opt_state = out.params, out.opt_state
+                st.sampler_rng_state = step.rng_state_after
+                # recycles the oldest generation, blocking on ITS compute
+                # only — the step just dispatched keeps running
+                prefetch.retire(step, out.losses)
+                logs = out.message_logs
+                for i in range(k):
+                    st.round = t + i + 1
+                    # a device row, not a host value: nothing blocks until
+                    # EvalHook pulls it at eval cadence
+                    st.last_losses = out.losses[i]
+                    metrics = {"round": st.round, "losses": out.losses[i],
+                               "comm_bytes_round": out.comm_bytes_round,
+                               "message_log": logs[i] if logs else None}
+                    for h in self.hooks:
+                        h.on_round_end(self, metrics)
+                t += k
+                if st.should_stop:
+                    break
+        finally:
+            if prefetch is not None:
+                prefetch.close()
         st.wall_seconds = time.perf_counter() - st.t0
         for h in self.hooks:
             h.on_train_end(self)

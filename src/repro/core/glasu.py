@@ -290,24 +290,83 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
     return params, opt_state, losses
 
 
+def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer, params,
+                opt_state, batch: SampledBatch, key):
+    """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates."""
+    if cfg.agg_layers:
+        _, stale = joint_inference(params, batch, cfg, key)
+    else:
+        # standalone: no communication; zero stale buffers never used
+        stale = {}
+    g_hl = None
+    if cfg.labels_at_client is not None:
+        g_hl = label_owner_grad(params, batch, stale, cfg)
+    return local_update_steps(
+        params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
+
+
 def make_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer):
-    """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates. jitted."""
+    """One jitted GLASU round; kept for per-round callers (simulation parity
+    probes, unit tests). The training hot path is ``make_multi_round_fn``."""
 
     @jax.jit
     def round_fn(params, opt_state, batch: SampledBatch, key):
-        if cfg.agg_layers:
-            _, stale = joint_inference(params, batch, cfg, key)
-        else:
-            # standalone: no communication; zero stale buffers never used
-            stale = {}
-        g_hl = None
-        if cfg.labels_at_client is not None:
-            g_hl = label_owner_grad(params, batch, stale, cfg)
-        params, opt_state, losses = local_update_steps(
-            params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
-        return params, opt_state, losses
+        return _round_body(cfg, optimizer, params, opt_state, batch, key)
 
     return round_fn
+
+
+def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                        rounds_per_step: Optional[int] = None):
+    """K GLASU rounds in one dispatch: ``lax.scan`` over round-stacked batches.
+
+    ``batches`` is a ``SampledBatch`` whose every leaf carries a leading
+    round axis K (see ``graph.prefetch.stack_batches``) and ``keys`` is the
+    matching (K, 2) stack of per-round PRNG keys. The scan compiles ONE
+    round body regardless of K and replays it K times device-side — one
+    host dispatch per K rounds instead of per round, which is where the
+    per-round Python/runtime overhead of the Trainer loop goes.
+
+    params/opt_state are donated: the update is in-place at the XLA level,
+    halving parameter-buffer HBM traffic per step. Callers must treat the
+    passed-in trees as consumed (the Trainer immediately rebinds them).
+
+    Returns ``(params, opt_state, losses)`` with losses of shape (K, Q) —
+    per-round rows, so hook cadence semantics (loss reporting, comm
+    metering) are preserved exactly. K is read off the leading axis at
+    trace time; distinct K values retrace (the Trainer cuts its schedule so
+    a run uses one K, plus at most a tail/cadence remainder).
+
+    ``rounds_per_step`` is an optional static hint: when given, a batch
+    whose leading axis disagrees is rejected loudly instead of silently
+    scanning a different number of rounds.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt_state, batches: SampledBatch, keys):
+        def body(carry, xs):
+            p, s = carry
+            batch, key = xs
+            p, s, losses = _round_body(cfg, optimizer, p, s, batch, key)
+            return (p, s), losses
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (batches, keys))
+        return params, opt_state, losses          # losses: (K, Q)
+
+    if rounds_per_step is None:
+        return step_fn
+
+    def checked(params, opt_state, batches, keys):
+        k = batches.labels.shape[0]
+        if k != rounds_per_step:
+            raise ValueError(
+                f"multi-round step built for rounds_per_step="
+                f"{rounds_per_step} got a {k}-round batch stack")
+        return step_fn(params, opt_state, batches, keys)
+
+    checked._jit = step_fn                       # expose cache introspection
+    return checked
 
 
 # ---------------------------------------------------------------- evaluation
@@ -318,8 +377,21 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
     feats: (M, N, d); nbr_idx/mask: (M, N, D+1) padded neighbor tables.
     Aggregation across clients happens at the configured layers only — the
     eval-time model is exactly the trained split model.
+
+    The chunk loop is a ``lax.map`` over chunk starts: the jit that wraps
+    this (EvalHook) compiles ONE chunk body instead of unrolling
+    ceil(N/chunk) copies of it. Destination tables are padded to a chunk
+    multiple (pad rows gather node 0 under a zero mask and are sliced off),
+    which also makes the chunk tiling exact when chunk does not divide N —
+    the previous clamped-dynamic-slice concatenation silently re-read
+    earlier rows in that case.
     """
-    n = feats.shape[1]
+    m, n = feats.shape[0], feats.shape[1]
+    pad = (-n) % chunk
+    if pad:
+        nbr_idx = jnp.pad(nbr_idx, ((0, 0), (0, pad), (0, 0)))
+        nbr_mask = jnp.pad(nbr_mask, ((0, 0), (0, pad), (0, 0)))
+    n_pad = n + pad
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
     h0 = h
     for l in range(cfg.n_layers):
@@ -328,11 +400,16 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
         def chunk_fn(lo, h_full=h, h0_full=h0, l=l, layer=layer):
             idx = jax.lax.dynamic_slice_in_dim(nbr_idx, lo, chunk, axis=1)
             mask = jax.lax.dynamic_slice_in_dim(nbr_mask, lo, chunk, axis=1)
-            return jax.vmap(layer)(params["layers"][l], h_full, h0_full, idx, mask)
+            return jax.vmap(layer)(params["layers"][l], h_full, h0_full,
+                                   idx, mask)
 
-        starts = list(range(0, n, chunk))
-        pieces = [chunk_fn(lo) for lo in starts]
-        h_plus = jnp.concatenate(pieces, axis=1)[:, :n]
+        if n_pad == chunk:
+            h_plus = chunk_fn(0)[:, :n]
+        else:
+            starts = jnp.arange(0, n_pad, chunk)
+            pieces = jax.lax.map(chunk_fn, starts)   # (C, M, chunk, h)
+            h_plus = jnp.moveaxis(pieces, 0, 1).reshape(
+                m, n_pad, pieces.shape[-1])[:, :n]
         if l in cfg.agg_layers:
             h, _ = _aggregate(cfg, h_plus)
         else:

@@ -33,7 +33,10 @@ class SampledBatch(NamedTuple):
     The arrays are views into per-layer scratch buffers owned by the sampler
     and are overwritten by the next ``sample_round`` call — consume or copy
     them (``jnp.array``, not ``jnp.asarray``: the latter zero-copy aliases
-    host numpy buffers on CPU) before sampling again.
+    host numpy buffers on CPU) before sampling again. The training loop
+    does this structurally: ``graph.prefetch.PrefetchSampler`` copies each
+    round into round-stacked generation buffers off the main thread and
+    gates their reuse on compute completion.
     """
 
     feats: np.ndarray                 # (M, n0, d_pad) f32 client-0-layer features
@@ -102,8 +105,15 @@ class GlasuSampler:
             for l in range(cfg.n_layers)]
         self._feat_scratch = np.zeros((M, self.layer_sizes[0], self.d_pad),
                                       np.float32)
-        # O(1) id -> position lookup used by _positions (reset after each use)
-        self._pos_lut = np.full(data.n_nodes, -1, dtype=np.int64)
+        # O(1) id -> position lookup used by _positions (reset after each
+        # use); positions are bounded by size_cap so int32 suffices and
+        # halves the table's footprint/refill traffic
+        self._pos_lut = np.full(data.n_nodes, -1, dtype=np.int32)
+        # per-layer (M, n_{l+1}, F+1) gather-query buffer reused across
+        # rounds (center column + fanout columns), sized like the gi scratch
+        self._query_scratch = [
+            np.zeros((M, self.layer_sizes[l + 1], F1), np.int32)
+            for l in range(cfg.n_layers)]
         # candidate mark array used by _build_set (reset after each use)
         self._mark = np.zeros(data.n_nodes, dtype=np.uint8)
         # all clients' tables stacked for the batched per-layer draw
@@ -211,8 +221,11 @@ class GlasuSampler:
             gi, gm, rv, sp = self._scratch[l]       # reused across rounds
             # self positions ride as column 0 of the gather query, so one
             # _positions call per client (or one batched call when shared)
-            # fills the whole (n, F+1) index/mask block
-            query = np.concatenate([cur[..., None], nbrs], axis=2)
+            # fills the whole (n, F+1) index/mask block; the query buffer is
+            # preallocated per layer — no per-round concatenate allocation
+            query = self._query_scratch[l]
+            query[..., 0] = cur
+            query[..., 1:] = nbrs
             if self._shared(l):
                 sset = self._build_set([cur], [nbrs], size)
                 pos = self._positions(sset, query)          # (M, n, F+1)
