@@ -3,16 +3,18 @@
     from repro.api import Trainer, get_preset
     result = Trainer(get_preset("cora-gcnii-glasu").with_(rounds=60)).run()
 """
-from .backends import (Backend, RoundResult, SimulationBackend, StepResult,
-                       VmappedBackend, make_backend)
+from .backends import (Backend, RoundResult, ShardedBackend,
+                       SimulationBackend, StepResult, VmappedBackend,
+                       make_backend)
 from .config import ExperimentConfig, agg_layers_for_k
 from .presets import get_preset, list_presets, register_preset
 from .trainer import (CheckpointHook, CommMeterHook, EarlyStopHook, EvalHook,
                       Hook, Trainer, TrainerState, step_schedule)
 
 __all__ = [
-    "Backend", "RoundResult", "StepResult", "SimulationBackend",
-    "VmappedBackend", "make_backend", "ExperimentConfig", "agg_layers_for_k",
+    "Backend", "RoundResult", "StepResult", "ShardedBackend",
+    "SimulationBackend", "VmappedBackend", "make_backend",
+    "ExperimentConfig", "agg_layers_for_k",
     "get_preset", "list_presets", "register_preset", "CheckpointHook",
     "CommMeterHook", "EarlyStopHook", "EvalHook", "Hook", "Trainer",
     "TrainerState", "step_schedule",

@@ -32,7 +32,7 @@ from ..optim import optimizers as opt_lib
 
 METHODS = ("glasu", "centralized", "standalone", "simulated-centralized",
            "fedbcd")
-BACKENDS = ("vmapped", "simulation")
+BACKENDS = ("vmapped", "simulation", "sharded")
 
 
 def agg_layers_for_k(n_layers: int, k: int) -> Tuple[int, ...]:
@@ -50,6 +50,7 @@ class ExperimentConfig:
     dataset: str = "cora"
     method: str = "glasu"
     backend: str = "vmapped"
+    mesh_devices: Optional[int] = None    # sharded: cap on client-mesh devices
     # --------------------------------------------------------------- model
     n_clients: int = 3                    # data parties M (model runs M=1 if centralized)
     n_layers: int = 4
@@ -163,6 +164,19 @@ class ExperimentConfig:
             if self.secure_agg or self.dp_sigma > 0.0:
                 err("SimulationBackend does not implement the §3.6 privacy "
                     "hooks; use the vmapped backend")
+        if self.mesh_devices is not None:
+            if self.backend != "sharded":
+                err("mesh_devices is only meaningful for the sharded backend")
+            if self.mesh_devices < 1:
+                err("mesh_devices must be >= 1")
+        if self.backend == "sharded":
+            if self.labels_at_client is not None:
+                err("ShardedBackend does not implement labels_at_client "
+                    "(Alg 6 owner gradient indexes the global client axis); "
+                    "use the vmapped backend")
+            if self.optimizer == "adafactor":
+                err("ShardedBackend does not support adafactor: factored "
+                    "second moments reduce across the client-stacked dim")
 
     # --------------------------------------------------------------- derived
     @property

@@ -190,7 +190,7 @@ class CheckpointHook(Hook):
 
     RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
                       "target_acc", "ckpt_every", "ckpt_dir",
-                      "rounds_per_step", "prefetch_buffers")
+                      "rounds_per_step", "prefetch_buffers", "mesh_devices")
 
     def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
         self.ckpt_dir = ckpt_dir
@@ -291,8 +291,10 @@ class Trainer:
         self.sampler = GlasuSampler(self.data, cfg.sampler_config(),
                                     seed=cfg.seed)
         self.optimizer = cfg.make_optimizer()
+        backend_kw = {"mesh_devices": cfg.mesh_devices} \
+            if cfg.backend == "sharded" and cfg.mesh_devices else {}
         self.backend = backend if backend is not None \
-            else make_backend(cfg.backend)
+            else make_backend(cfg.backend, **backend_kw)
         self.backend.bind(self.model_cfg, self.optimizer, self.sampler)
         self.hooks: List[Hook] = [CommMeterHook(), EvalHook()]
         if cfg.target_acc is not None:

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -176,21 +176,28 @@ def _combine_with_stale(cfg: GlasuConfig, stale_l, h_plus_m, m_index=None):
 # ------------------------------------------------------------------- forward
 def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_index,
                   stale: Optional[Dict[int, Any]] = None,
-                  return_hidden: bool = False):
+                  return_hidden: bool = False, global_index=None):
     """One client's pass through all layers, aggregating via stale buffers.
 
     Used by LocalUpdate (Alg 4): server aggregation is replaced by the stored
     H_{-m} plus the client's fresh representation.
+
+    ``m_index`` indexes the client-stacked batch arrays; ``global_index``
+    (default: ``m_index``) is the client's position in the GLOBAL client
+    order, which concat aggregation needs for its own-block placement. They
+    differ only on the sharded backend, where each device holds a local
+    block of the client axis and batch arrays are local blocks too.
     """
     h = feats_m @ params_m["inp"]["W"] + params_m["inp"]["b"]
     h0 = h
+    g_index = m_index if global_index is None else global_index
     for l in range(cfg.n_layers):
         layer = _client_layer(cfg, l)
         idx, mask = batch.gather_idx[l][m_index], batch.gather_mask[l][m_index]
         h_plus = layer(params_m["layers"][l], h, h0, idx, mask)
         h0 = h0[batch.self_pos[l][m_index]]
         if l in cfg.agg_layers:
-            h = _combine_with_stale(cfg, stale[l], h_plus, m_index)
+            h = _combine_with_stale(cfg, stale[l], h_plus, g_index)
         else:
             h = h_plus
     if return_hidden:
@@ -223,9 +230,10 @@ def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None):
 
 
 def client_loss(params_m, feats_m, batch: SampledBatch, stale_m, labels,
-                cfg: GlasuConfig, m_index):
+                cfg: GlasuConfig, m_index, global_index=None):
     """Client m's local objective (Alg 4 line 11) with stale buffers fixed."""
-    logits = _client_trunk(cfg, params_m, feats_m, batch, m_index, stale_m)
+    logits = _client_trunk(cfg, params_m, feats_m, batch, m_index, stale_m,
+                           global_index=global_index)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.mean(nll)
@@ -367,6 +375,267 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
 
     checked._jit = step_fn                       # expose cache introspection
     return checked
+
+
+# ------------------------------------------------------- sharded execution
+# Device-sharded client parallelism: each mesh device along the 'clients'
+# axis holds an even block of m_loc = M / n_devices clients (params, opt
+# state, batch slices) and runs `_client_trunk` device-local under
+# ``shard_map``. The ONLY cross-device operation is server aggregation: the
+# clients' uploads are ``all_gather``ed along the axis and the identical
+# parameter-free Agg of §3.1 (`_aggregate`, including the §3.6 privacy
+# hooks — the PRNG key is replicated, so masks/noise match the vmapped path
+# bit-for-bit) runs on the gathered stack, exactly where the paper places
+# communication. Each collective is recorded at trace time so the byte
+# meter reports what the compiled program actually moves, priced under the
+# paper's star topology (Fig 1: every client uploads its block, the server
+# returns the aggregate).
+
+class CollectiveRecord(NamedTuple):
+    """One cross-client collective, recorded while tracing the round body."""
+    layer: int          # aggregation layer index l
+    n_clients: int      # M (global)
+    n_rows: int         # n_{l+1} rows per upload
+    width_up: int       # per-client upload width (hidden)
+    width_down: int     # aggregate width broadcast back (hidden | M*hidden)
+    itemsize: int       # payload dtype bytes
+
+    def star_bytes(self) -> int:
+        """Bytes under the paper's client<->server star topology (§3.2):
+        M uploads of (n, width_up) + M downloads of (n, width_down)."""
+        return self.n_clients * self.n_rows * (
+            self.width_up + self.width_down) * self.itemsize
+
+
+def _gather_clients(x, axis_name: str):
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
+                            key=None, *, axis_name: str, m_loc: int,
+                            record=None):
+    """Alg 3 under shard_map: per-device client blocks, collective Agg.
+
+    All array leaves of ``params``/``batch`` carry the LOCAL client block
+    (leading dim m_loc); ``batch.labels`` and ``key`` are replicated. At
+    every aggregation layer the local uploads are gathered to the full
+    (M, n, h) stack and `_aggregate` runs verbatim on it — the same op on
+    the same values as the vmapped path — then the device keeps its local
+    slice of the broadcast aggregate and the Extract (stale) buffers.
+
+    Returns (local logits (m_loc, S, C), stale {l: (m_loc, n_{l+1}, h_agg)}).
+    ``record``, when given, is called with a ``CollectiveRecord`` per
+    aggregation layer at trace time (the byte meter's measurement hook).
+    """
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], batch.feats)
+    h0 = h
+    stale: Dict[int, Any] = {}
+    i0 = jax.lax.axis_index(axis_name) * m_loc
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l in cfg.agg_layers:
+            subkey = jax.random.fold_in(key, l) if key is not None else None
+            uploads = _gather_clients(h_plus, axis_name)       # (M, n, h)
+            h_full, stale_full = _aggregate(cfg, uploads, subkey)
+            if record is not None:
+                record(CollectiveRecord(
+                    layer=l, n_clients=uploads.shape[0],
+                    n_rows=uploads.shape[1], width_up=uploads.shape[2],
+                    width_down=h_full.shape[-1],
+                    itemsize=jnp.dtype(uploads.dtype).itemsize))
+            h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
+            stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0, m_loc,
+                                                    axis=0)
+        else:
+            h = h_plus
+    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    return logits, stale
+
+
+def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                                params, opt_state, batch: SampledBatch, stale,
+                                axis_name: str, m_loc: int):
+    """Q iterations of Alg 4 on the local client block (device-local: the
+    stale buffers already hold H_{-m}, so no communication — exactly the
+    paper's client-side phase). Only the reported mean loss crosses devices
+    (an all_gather of Q scalars per round; diagnostics, not algorithm
+    traffic, hence unmetered)."""
+    labels = batch.labels
+    m_local = jnp.arange(m_loc)
+    m_global = jax.lax.axis_index(axis_name) * m_loc + m_local
+
+    def one_step(carry, _):
+        p, s = carry
+
+        def per_client(params_m, feats_m, stale_m, m_index, g_index):
+            return client_loss(params_m, feats_m, batch, stale_m, labels,
+                               cfg, m_index, global_index=g_index)
+
+        loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                               in_axes=(0, 0, 0, 0, 0))(
+            p, batch.feats, stale, m_local, m_global)
+        updates, s = optimizer.update(grads, s, p)
+        p = opt_lib.apply_updates(p, updates)
+        # gather to the global (M,) loss row so the reported mean is the
+        # same reduction as the vmapped path's jnp.mean over all clients
+        return (p, s), jnp.mean(_gather_clients(loss, axis_name))
+
+    (params, opt_state), losses = jax.lax.scan(
+        one_step, (params, opt_state), None, length=cfg.n_local_steps)
+    return params, opt_state, losses
+
+
+def _sharded_round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                        axis_name: str, m_loc: int, params, opt_state,
+                        batch: SampledBatch, key, record=None):
+    """One GLASU round on local client blocks (Alg 1 body under shard_map)."""
+    if cfg.labels_at_client is not None:
+        raise NotImplementedError(
+            "labels_at_client requires indexing the global client axis "
+            "(Alg 6 owner gradient); use the vmapped backend")
+    if cfg.agg_layers:
+        _, stale = sharded_joint_inference(params, batch, cfg, key,
+                                           axis_name=axis_name, m_loc=m_loc,
+                                           record=record)
+    else:
+        stale = {}
+    return _sharded_local_update_steps(cfg, optimizer, params, opt_state,
+                                       batch, stale, axis_name, m_loc)
+
+
+def _client_axis_check(cfg: GlasuConfig, mesh, axis: str) -> int:
+    d = mesh.shape[axis]
+    if cfg.n_clients % d:
+        raise ValueError(
+            f"mesh axis {axis!r} has {d} devices, which does not divide "
+            f"n_clients={cfg.n_clients}; build the mesh with "
+            "launch.mesh.make_client_mesh (largest dividing axis) or pass "
+            "one whose size divides the client count")
+    return cfg.n_clients // d
+
+
+def _sharded_specs(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                   axis: str, round_stacked: bool = False):
+    """(params, opt_state, batch) shard_map spec trees for the round body.
+
+    These are the EXACT specs of the client-stacked layout (leading client
+    dim on the ``clients`` axis); divisibility is enforced by
+    `_client_axis_check`, unlike the guarded placement rules in
+    launch.sharding which fall back to replication.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    cspec = P(*((None, axis) if round_stacked else (axis,)))
+    params_abs = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    pspecs = jax.tree.map(lambda _: P(axis), params_abs)
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    if isinstance(opt_abs, opt_lib.AdamState):
+        ospecs = opt_lib.AdamState(P(), pspecs, pspecs)
+    elif isinstance(opt_abs, opt_lib.SGDState):
+        ospecs = opt_lib.SGDState(
+            P(), pspecs if opt_abs.momentum is not None else None)
+    else:
+        raise ValueError(
+            f"sharded GLASU supports sgd/momentum/adam/adamw states, got "
+            f"{type(opt_abs).__name__}: factored second moments (adafactor) "
+            "reduce across the client-stacked dim and would mix clients")
+    per = tuple(cspec for _ in range(cfg.n_layers))
+    bspecs = SampledBatch(feats=cspec, gather_idx=per, gather_mask=per,
+                          row_valid=per, labels=P(), self_pos=per)
+    return pspecs, ospecs, bspecs
+
+
+def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                          mesh, axis: str = "clients", record=None,
+                          jit: bool = True):
+    """One GLASU round with clients sharded over ``mesh``'s ``axis``.
+
+    ``record`` (see ``CollectiveRecord``) observes the aggregation
+    collectives at trace time; ``jit=False`` returns the bare shard_map'd
+    callable, which is what the byte meter abstractly evaluates at bind."""
+    from jax.experimental.shard_map import shard_map
+
+    m_loc = _client_axis_check(cfg, mesh, axis)
+    pspecs, ospecs, bspecs = _sharded_specs(cfg, optimizer, axis)
+    from jax.sharding import PartitionSpec as P
+
+    body = functools.partial(_sharded_round_body, cfg, optimizer, axis,
+                             m_loc, record=record)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(pspecs, ospecs, bspecs, P()),
+                   out_specs=(pspecs, ospecs, P()), check_rep=False)
+    return jax.jit(fn) if jit else fn
+
+
+def make_sharded_multi_round_fn(cfg: GlasuConfig,
+                                optimizer: opt_lib.Optimizer, mesh,
+                                axis: str = "clients",
+                                rounds_per_step: Optional[int] = None):
+    """K sharded rounds per dispatch: ``lax.scan`` INSIDE the shard_map, so
+    one collective program advances all K rounds — same donation and
+    round-stacked batch contract as ``make_multi_round_fn``."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m_loc = _client_axis_check(cfg, mesh, axis)
+    pspecs, ospecs, _ = _sharded_specs(cfg, optimizer, axis)
+    _, _, bspecs_k = _sharded_specs(cfg, optimizer, axis, round_stacked=True)
+
+    def scan_body(params, opt_state, batches, keys):
+        def body(carry, xs):
+            p, s = carry
+            batch, key = xs
+            p, s, losses = _sharded_round_body(cfg, optimizer, axis, m_loc,
+                                               p, s, batch, key)
+            return (p, s), losses
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (batches, keys))
+        return params, opt_state, losses          # losses: (K, Q)
+
+    step_fn = jax.jit(
+        shard_map(scan_body, mesh=mesh,
+                  in_specs=(pspecs, ospecs, bspecs_k, P()),
+                  out_specs=(pspecs, ospecs, P()), check_rep=False),
+        donate_argnums=(0, 1))
+
+    if rounds_per_step is None:
+        return step_fn
+
+    def checked(params, opt_state, batches, keys):
+        k = batches.labels.shape[0]
+        if k != rounds_per_step:
+            raise ValueError(
+                f"sharded multi-round step built for rounds_per_step="
+                f"{rounds_per_step} got a {k}-round batch stack")
+        return step_fn(params, opt_state, batches, keys)
+
+    checked._jit = step_fn
+    return checked
+
+
+def make_sharded_joint_fn(cfg: GlasuConfig, mesh, axis: str = "clients"):
+    """JointInference logits with clients sharded over the mesh: returns the
+    global (M, S, C) stack (assembled from per-device blocks)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m_loc = _client_axis_check(cfg, mesh, axis)
+    # specs don't depend on the optimizer; borrow sgd for the helper
+    pspecs, _, bspecs = _sharded_specs(cfg, opt_lib.sgd(0.0), axis)
+
+    def body(params, batch, key):
+        logits, _ = sharded_joint_inference(params, batch, cfg, key,
+                                            axis_name=axis, m_loc=m_loc)
+        return logits
+
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(pspecs, bspecs, P()),
+                             out_specs=P(axis), check_rep=False))
 
 
 # ---------------------------------------------------------------- evaluation

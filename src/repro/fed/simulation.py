@@ -124,6 +124,31 @@ def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
             log.send("server", f"client{m}", "index_sync", j, payload)
 
 
+def log_agg_traffic(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
+    """Replay JointInference's aggregation messages shape-only (no compute).
+
+    Per aggregation layer, each client uploads its (n_{l+1}, h) block and the
+    server broadcasts the aggregate back ((n_{l+1}, h) for mean,
+    (n_{l+1}, M*h) for concat) — the exact message sequence of
+    ``simulate_joint_inference``, enumerated from the batch's static shapes.
+    Together with ``log_index_sync`` this reconstructs one round's full
+    message log without running the model; the sharded backend audits its
+    collective byte meter against it (mean AND concat — the compute-level
+    simulation itself stays mean-only).
+    """
+    if not cfg.agg_layers:
+        return
+    for l in sorted(cfg.agg_layers):
+        n = batch.gather_idx[l].shape[1]
+        up = np.broadcast_to(np.float32(0), (n, cfg.hidden))
+        down_h = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
+        down = np.broadcast_to(np.float32(0), (n, down_h))
+        for m in range(cfg.n_clients):
+            log.send(f"client{m}", "server", "upload", l, up)
+        for m in range(cfg.n_clients):
+            log.send("server", f"client{m}", "broadcast", l, down)
+
+
 def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
                    optimizer):
     """One full GLASU round (Alg 1) over explicit messages.

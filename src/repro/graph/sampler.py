@@ -258,6 +258,22 @@ class GlasuSampler:
         return SampledBatch(feats, tuple(gidx), tuple(gmask), tuple(rvalid),
                             labels, tuple(spos))
 
+    def shape_shell_batch(self) -> SampledBatch:
+        """Zero-stride shells with one round's static shapes/dtypes.
+
+        For shape-driven consumers — abstract tracing (``jax.eval_shape``)
+        and message/byte accounting — without touching the live scratch
+        buffers or allocating real arrays.
+        """
+        z = lambda a: np.broadcast_to(np.zeros((), a.dtype), a.shape)
+        gi, gm, rv, sp = zip(*[(z(i), z(m), z(v), z(p))
+                               for i, m, v, p in self._scratch])
+        return SampledBatch(
+            feats=z(self._feat_scratch), gather_idx=gi, gather_mask=gm,
+            row_valid=rv,
+            labels=np.broadcast_to(np.int32(0), (self.cfg.batch_size,)),
+            self_pos=sp)
+
     def comm_bytes_per_joint_inference(self, hidden: int, agg: str = "mean") -> int:
         """Paper cost model: per aggregation layer, every client uploads its
         (n_{l+1}, h) block and receives the aggregate back; plus index sync."""

@@ -1,13 +1,20 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# jax locks the device count on first init, so this must run before any jax
+# import; the 512 placeholder host devices exist ONLY here — smoke tests and
+# benchmarks see 1 device. APPEND to any user-set XLA_FLAGS (never clobber
+# other flags), and respect an explicit user-chosen device count.
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512").strip()
 
 """Multi-pod dry-run (mandate e): lower + compile every (architecture x
 input shape) on the production meshes, print memory/cost analysis, and
 extract the collective schedule for the roofline analysis.
 
-The two lines above MUST stay first: jax locks the device count on first
-init, and the 512 placeholder host devices exist ONLY here — smoke tests and
-benchmarks see 1 device.
+The block above MUST stay first (before the jax imports below).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch smollm_360m --shape train_4k

@@ -17,6 +17,38 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def client_mesh_size(n_clients: int, n_devices: int) -> int:
+    """Largest divisor of ``n_clients`` that fits on ``n_devices``.
+
+    Even client blocks per device are required by the GLASU shard_map round
+    body; a non-dividing axis would leave ragged shards. With fewer devices
+    than any divisor > 1, the mesh degenerates to one device (m_loc = M),
+    which runs the identical collective code path trivially.
+    """
+    if n_clients < 1 or n_devices < 1:
+        raise ValueError(f"need positive counts, got n_clients={n_clients} "
+                         f"n_devices={n_devices}")
+    return max(d for d in range(1, min(n_clients, n_devices) + 1)
+               if n_clients % d == 0)
+
+
+def make_client_mesh(n_clients: int, *, max_devices=None, devices=None):
+    """One-axis ``('clients',)`` mesh for the sharded GLASU backend.
+
+    Places each client (or an even block of clients) on its own device: the
+    axis size is the largest divisor of ``n_clients`` the available devices
+    allow, so ``shard_map`` blocks are always even. CPU-testable via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if max_devices is not None:
+        if max_devices < 1:
+            raise ValueError(f"max_devices must be >= 1, got {max_devices}")
+        devs = devs[:max_devices]
+    d = client_mesh_size(n_clients, len(devs))
+    return jax.make_mesh((d,), ("clients",), devices=devs[:d])
+
+
 # v5e hardware constants for the roofline analysis
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

@@ -212,3 +212,40 @@ def cache_specs(cfg: ArchConfig, shape: InputShape, caches, mesh: Mesh):
 def tree_shardings(tree_specs, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------- GLASU client-stacked path
+# The federated split model (core/glasu.py) stacks the M clients as the
+# leading axis of every parameter, optimizer-state, and batch leaf. The
+# sharded backend places that axis on the 'clients' mesh axis; like every
+# rule in this module the spec is divisibility-guarded — an axis that does
+# not divide M falls back to replication (the safe generic placement; the
+# shard_map round body itself additionally REQUIRES divisibility and the
+# client mesh is built to guarantee it, see launch.mesh.make_client_mesh).
+
+def client_leaf_spec(leaf, mesh: Mesh, axis: str = "clients",
+                     lead: int = 0) -> P:
+    """Shard dim ``lead`` (the client-stacked dim) over ``axis``, guarded."""
+    spec = [None] * leaf.ndim
+    if leaf.ndim > lead:
+        spec[lead] = axis
+    return _guard(mesh, leaf.shape, spec)
+
+
+def client_param_specs(params, mesh: Mesh, axis: str = "clients"):
+    """Specs for GLASU's client-stacked parameter tree (every leaf (M, ...))."""
+    return jax.tree.map(lambda l: client_leaf_spec(l, mesh, axis), params)
+
+
+def client_batch_specs(batch, mesh: Mesh, axis: str = "clients",
+                       round_stacked: bool = False):
+    """Specs for a ``SampledBatch``: client-stacked leaves shard their client
+    dim (dim 0, or dim 1 under a leading round axis); ``labels`` is the
+    shared mini-batch (replicated, paper Alg 2)."""
+    lead = 1 if round_stacked else 0
+    leaf = lambda l: client_leaf_spec(l, mesh, axis, lead=lead)
+    per = lambda xs: tuple(leaf(x) for x in xs)
+    return type(batch)(
+        feats=leaf(batch.feats), gather_idx=per(batch.gather_idx),
+        gather_mask=per(batch.gather_mask), row_valid=per(batch.row_valid),
+        labels=P(), self_pos=per(batch.self_pos))

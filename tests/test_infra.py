@@ -117,3 +117,28 @@ def test_hlo_walker_nested_and_collect_bytes():
     r = hlo_cost.analyze(jax.jit(nested).lower(x).compile().as_text())
     assert r["flops"] == pytest.approx(15 * 2 * 64 ** 3, rel=0.01)
     assert r["hbm_bytes"] > 15 * 2 * 64 * 64 * 4  # at least the carrier traffic
+
+
+# ------------------------------------------------------------ dryrun env hygiene
+@pytest.mark.slow
+def test_dryrun_appends_to_user_xla_flags():
+    """Importing launch.dryrun must append its host-device-count flag to any
+    user-set XLA_FLAGS (it used to clobber the variable), and must respect a
+    user-chosen device count."""
+    import os
+    import subprocess
+    import sys
+
+    code = ("import os, repro.launch.dryrun; "
+            "print(os.environ['XLA_FLAGS'])")
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_cpu_enable_fast_math=false")
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=".",
+                         capture_output=True, text=True, check=True).stdout
+    assert "--xla_cpu_enable_fast_math=false" in out
+    assert "--xla_force_host_platform_device_count=512" in out
+
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run([sys.executable, "-c", code], env=env, cwd=".",
+                         capture_output=True, text=True, check=True).stdout
+    assert out.strip() == "--xla_force_host_platform_device_count=4"
