@@ -34,6 +34,10 @@ def main() -> None:
     print("# train loop (scanned engine vs per-round)")
     train_bench.run(smoke=not args.full)
 
+    from . import comm_compression
+    print("# comm compression (bytes/round vs accuracy, meters audited)")
+    comm_compression.run(smoke=not args.full)
+
     from . import (accuracy_parity, backbones, client_scaling, comm_model,
                    lazy_aggregation, stale_updates)
     from .common import BenchSettings

@@ -3,6 +3,7 @@
     from repro.api import Trainer, get_preset
     result = Trainer(get_preset("cora-gcnii-glasu").with_(rounds=60)).run()
 """
+from ..comm.compression import CompressionConfig
 from .backends import (Backend, RoundResult, ShardedBackend,
                        SimulationBackend, StepResult, VmappedBackend,
                        make_backend)
@@ -14,7 +15,7 @@ from .trainer import (CheckpointHook, CommMeterHook, EarlyStopHook, EvalHook,
 __all__ = [
     "Backend", "RoundResult", "StepResult", "ShardedBackend",
     "SimulationBackend", "VmappedBackend", "make_backend",
-    "ExperimentConfig", "agg_layers_for_k",
+    "CompressionConfig", "ExperimentConfig", "agg_layers_for_k",
     "get_preset", "list_presets", "register_preset", "CheckpointHook",
     "CommMeterHook", "EarlyStopHook", "EvalHook", "Hook", "Trainer",
     "TrainerState", "step_schedule",

@@ -22,6 +22,7 @@ from typing import Any, Optional, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from ..comm.compression import make_compressor
 from ..core import glasu
 from ..core.glasu import GlasuConfig
 from ..fed import simulation
@@ -107,36 +108,59 @@ def run_step_sequential(backend, params, opt_state, batches: SampledBatch,
                       else None)
 
 
-def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler) -> int:
-    """Paper §3.2/§3.4 cost model; zero when nothing actually crosses clients."""
+def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler,
+                    compressor=None) -> int:
+    """Paper §3.2/§3.4 cost model; zero when nothing actually crosses
+    clients. With a compressor, embedding messages are priced at their
+    exact wire size (the int32 index sync is codec-independent)."""
     if cfg.agg_layers and cfg.n_clients > 1:
-        return sampler.comm_bytes_per_joint_inference(cfg.hidden, cfg.agg)
+        return sampler.comm_bytes_per_joint_inference(cfg.hidden, cfg.agg,
+                                                      compressor=compressor)
     return 0
 
 
 class VmappedBackend:
     """Stacked-axis fast path: one jitted scanned step_fn (K rounds per
-    dispatch, donated params/opt_state), analytic byte meter."""
+    dispatch, donated params/opt_state), analytic byte meter.
+
+    With ``model_cfg.compression`` active the backend owns the
+    error-feedback carry (``self.comp_state``): it is threaded (and
+    donated) through every round/step alongside the optimizer state, and
+    the Trainer checkpoints/restores it via the backend attribute.
+    """
 
     name = "vmapped"
 
     def bind(self, model_cfg, optimizer, sampler):
         self.cfg = model_cfg
         self.optimizer = optimizer
-        self.bytes_per_round = _analytic_bytes(model_cfg, sampler)
+        self.compressor = make_compressor(model_cfg.compression)
+        self.comp_state = glasu.init_comp_state(model_cfg,
+                                                sampler.layer_sizes,
+                                                self.compressor)
+        self.bytes_per_round = _analytic_bytes(model_cfg, sampler,
+                                               self.compressor)
         self.step_fn = glasu.make_multi_round_fn(model_cfg, optimizer)
         self._round_fn = None                 # built lazily for run_round
 
     def run_round(self, params, opt_state, batch, key):
         if self._round_fn is None:
             self._round_fn = glasu.make_round_fn(self.cfg, self.optimizer)
-        params, opt_state, losses = self._round_fn(params, opt_state, batch,
-                                                   key)
+        if self.compressor is None:
+            params, opt_state, losses = self._round_fn(params, opt_state,
+                                                       batch, key)
+        else:
+            params, opt_state, self.comp_state, losses = self._round_fn(
+                params, opt_state, self.comp_state, batch, key)
         return RoundResult(params, opt_state, losses, self.bytes_per_round)
 
     def run_step(self, params, opt_state, batches, keys):
-        params, opt_state, losses = self.step_fn(params, opt_state, batches,
-                                                 keys)
+        if self.compressor is None:
+            params, opt_state, losses = self.step_fn(params, opt_state,
+                                                     batches, keys)
+        else:
+            params, opt_state, self.comp_state, losses = self.step_fn(
+                params, opt_state, self.comp_state, batches, keys)
         return StepResult(params, opt_state, losses, self.bytes_per_round)
 
     def joint_logits(self, params, batch, key=None):
@@ -158,11 +182,20 @@ class SimulationBackend:
                              "privacy hooks")
         self.cfg = model_cfg
         self.optimizer = optimizer
-        self.bytes_per_round = _analytic_bytes(model_cfg, sampler)
+        self.compressor = make_compressor(model_cfg.compression)
+        self.comp_state = glasu.init_comp_state(model_cfg,
+                                                sampler.layer_sizes,
+                                                self.compressor)
+        self.bytes_per_round = _analytic_bytes(model_cfg, sampler,
+                                               self.compressor)
 
     def run_round(self, params, opt_state, batch, key):
-        params, opt_state, losses, log = simulation.simulate_round(
-            params, opt_state, batch, self.cfg, self.optimizer)
+        params, opt_state, losses, log, comp_state = \
+            simulation.simulate_round(params, opt_state, batch, self.cfg,
+                                      self.optimizer, self.compressor,
+                                      self.comp_state)
+        if self.compressor is not None:
+            self.comp_state = comp_state
         measured = log.total_bytes()
         if self.cfg.n_clients > 1 and self.cfg.agg_layers \
                 and measured != self.bytes_per_round:
@@ -220,6 +253,10 @@ class ShardedBackend:
         self.mesh = self._mesh if self._mesh is not None else \
             make_client_mesh(model_cfg.n_clients,
                              max_devices=self._mesh_devices)
+        self.compressor = make_compressor(model_cfg.compression)
+        self.comp_state = glasu.init_comp_state(model_cfg,
+                                                sampler.layer_sizes,
+                                                self.compressor)
 
         # placement shardings for inputs that arrive from off-mesh (init,
         # checkpoint restore, the host sampler): client-stacked leading dim
@@ -230,6 +267,10 @@ class ShardedBackend:
         self.param_sh = shd.tree_shardings(pspecs, self.mesh)
         self.opt_sh = shd.tree_shardings(
             shd.opt_state_specs(opt_abs, pspecs, self.mesh), self.mesh)
+        self.comp_sh = None if self.comp_state is None else \
+            shd.tree_shardings(
+                shd.client_comp_state_specs(self.comp_state, self.mesh),
+                self.mesh)
 
         # byte meter: record the aggregation collectives from an abstract
         # trace of the round body, then audit them message-by-message
@@ -238,8 +279,12 @@ class ShardedBackend:
         trace_fn = glasu.make_sharded_round_fn(
             model_cfg, optimizer, self.mesh, record=records.append,
             jit=False)
-        jax.eval_shape(trace_fn, params_abs, opt_abs, shell,
-                       jax.random.PRNGKey(0))
+        if self.compressor is None:
+            jax.eval_shape(trace_fn, params_abs, opt_abs, shell,
+                           jax.random.PRNGKey(0))
+        else:
+            jax.eval_shape(trace_fn, params_abs, opt_abs, self.comp_state,
+                           shell, jax.random.PRNGKey(0))
         self.collectives = tuple(records)
         self.bytes_per_round = self._audited_bytes(shell)
 
@@ -254,7 +299,7 @@ class ShardedBackend:
         measured = sum(r.star_bytes() for r in self.collectives)
         log = simulation.MessageLog()
         simulation.log_index_sync(log, shell, cfg)
-        simulation.log_agg_traffic(log, shell, cfg)
+        simulation.log_agg_traffic(log, shell, cfg, compressor=self.compressor)
         expected_act = (log.total_bytes("upload")
                         + log.total_bytes("broadcast"))
         if measured != expected_act:
@@ -278,21 +323,36 @@ class ShardedBackend:
                                        round_stacked=round_stacked)
         return jax.device_put(batch, shd.tree_shardings(specs, self.mesh))
 
+    def _placed_comp_state(self):
+        """EF carry on-mesh: uplink block sharded, downlink replicated.
+        (No-op after the first step — outputs already carry the sharding.)"""
+        if not self.comp_state:          # None (off) or {} (stateless codec)
+            return self.comp_state
+        return jax.device_put(self.comp_state, self.comp_sh)
+
     def run_round(self, params, opt_state, batch, key):
         if self._round_fn is None:
             self._round_fn = glasu.make_sharded_round_fn(
                 self.cfg, self.optimizer, self.mesh)
         params, opt_state = self._place(params, opt_state)
         batch = self._place_batch(batch, round_stacked=False)
-        params, opt_state, losses = self._round_fn(params, opt_state, batch,
-                                                   key)
+        if self.compressor is None:
+            params, opt_state, losses = self._round_fn(params, opt_state,
+                                                       batch, key)
+        else:
+            params, opt_state, self.comp_state, losses = self._round_fn(
+                params, opt_state, self._placed_comp_state(), batch, key)
         return RoundResult(params, opt_state, losses, self.bytes_per_round)
 
     def run_step(self, params, opt_state, batches, keys):
         params, opt_state = self._place(params, opt_state)
         batches = self._place_batch(batches, round_stacked=True)
-        params, opt_state, losses = self.step_fn(params, opt_state, batches,
-                                                 keys)
+        if self.compressor is None:
+            params, opt_state, losses = self.step_fn(params, opt_state,
+                                                     batches, keys)
+        else:
+            params, opt_state, self.comp_state, losses = self.step_fn(
+                params, opt_state, self._placed_comp_state(), batches, keys)
         return StepResult(params, opt_state, losses, self.bytes_per_round)
 
     def joint_logits(self, params, batch, key=None):

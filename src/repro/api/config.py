@@ -25,6 +25,7 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
+from ..comm.compression import CompressionConfig
 from ..core.glasu import GlasuConfig
 from ..core.train import TrainConfig
 from ..graph.sampler import SamplerConfig
@@ -67,6 +68,12 @@ class ExperimentConfig:
     secure_agg: bool = False
     labels_at_client: Optional[int] = None
     use_pallas: bool = False
+    # ---------------------------------------------------------- compression
+    # wire codec for the §3.1 embedding exchange (None = full float32).
+    # A plain dict {"method": ..., "k": ..., "error_feedback": ...} is
+    # coerced to a validated CompressionConfig; resume-mutable — EF
+    # accumulators reset when the codec changes across a resume.
+    compression: Optional[CompressionConfig] = None
     # -------------------------------------------------------------- sampler
     batch_size: int = 16
     fanout: int = 3
@@ -115,6 +122,21 @@ class ExperimentConfig:
             err("concat aggregation is implemented for the gcn backbone only")
         if self.eval_mode not in (None, "ensemble", "per_client"):
             err(f"unknown eval_mode {self.eval_mode!r}")
+        if isinstance(self.compression, dict):
+            try:
+                object.__setattr__(self, "compression",
+                                   CompressionConfig(**self.compression))
+            except (TypeError, ValueError) as e:
+                err(f"invalid compression block: {e}")
+        elif not (self.compression is None
+                  or isinstance(self.compression, CompressionConfig)):
+            err(f"compression must be a CompressionConfig or dict, got "
+                f"{type(self.compression).__name__}")
+        if self.compression is not None and self.compression.active \
+                and self.secure_agg:
+            err("secure_agg masks cancel only exactly; compressed uploads "
+                "break the pairwise cancellation — disable one of "
+                "compression / secure_agg")
 
         # method-specific derivations / constraints
         if self.method == "simulated-centralized":
@@ -216,7 +238,7 @@ class ExperimentConfig:
             gcnii_beta=self.gcnii_beta, gat_heads=self.gat_heads,
             dp_sigma=self.dp_sigma, secure_agg=self.secure_agg,
             labels_at_client=self.labels_at_client,
-            use_pallas=self.use_pallas)
+            use_pallas=self.use_pallas, compression=self.compression)
 
     def sampler_config(self) -> SamplerConfig:
         return SamplerConfig(
@@ -247,7 +269,7 @@ class ExperimentConfig:
         return dataclasses.replace(self, **kw)
 
     def to_dict(self) -> dict:
-        d = dataclasses.asdict(self)
+        d = dataclasses.asdict(self)           # nested dataclasses -> dicts
         if d["agg_layers"] is not None:
             d["agg_layers"] = list(d["agg_layers"])
         return d
@@ -262,6 +284,7 @@ class ExperimentConfig:
                              f"{sorted(unknown)}")
         if d.get("agg_layers") is not None:
             d["agg_layers"] = tuple(d["agg_layers"])
+        # compression dicts are coerced to CompressionConfig in __post_init__
         return cls(**d)
 
     @classmethod

@@ -190,7 +190,8 @@ class CheckpointHook(Hook):
 
     RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
                       "target_acc", "ckpt_every", "ckpt_dir",
-                      "rounds_per_step", "prefetch_buffers", "mesh_devices")
+                      "rounds_per_step", "prefetch_buffers", "mesh_devices",
+                      "compression")
 
     def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
         self.ckpt_dir = ckpt_dir
@@ -210,10 +211,12 @@ class CheckpointHook(Hook):
         meta = pathlib.Path(self.ckpt_dir) / "experiment.json"
         step = checkpoint.latest_step(self.ckpt_dir)
         if step is not None:
+            saved_comp = None
             if meta.exists():
                 saved = ExperimentConfig.from_dict(
                     json.loads(meta.read_text())).to_dict()
                 here = trainer.cfg.to_dict()
+                saved_comp = saved.get("compression")
                 for k in self.RESUME_MUTABLE:
                     saved.pop(k, None)
                     here.pop(k, None)
@@ -226,6 +229,7 @@ class CheckpointHook(Hook):
             st.params = tree["params"]
             st.opt_state = tree["opt_state"]
             st.round = step
+            self._restore_comp_state(trainer, step, saved_comp)
             loop = json.loads(self._sidecar(step).read_text())
             st.comm_bytes = loop["comm_bytes"]
             st.val_acc, st.test_acc = loop["val_acc"], loop["test_acc"]
@@ -251,10 +255,45 @@ class CheckpointHook(Hook):
             pathlib.Path(self.ckpt_dir).mkdir(parents=True, exist_ok=True)
             meta.write_text(json.dumps(trainer.cfg.to_dict(), indent=1))
 
+    def _restore_comp_state(self, trainer, step: int, saved_comp):
+        """Restore the compressed-exchange EF accumulators (resume-mutable).
+
+        The ``compression`` block may change between resumes; accumulators
+        are only restored when (a) the current run keeps one (EF enabled),
+        (b) a ``comp_<step>.npz`` sidecar exists, and (c) the codec that
+        wrote it is KNOWN to match the current one (``experiment.json``
+        comparison — different codecs produce identically-shaped state
+        trees, so a residual restored across a codec change would load
+        silently and mean nothing). Otherwise — including a missing or
+        unreadable meta file, i.e. unknown provenance — error feedback
+        restarts from zeros, which is always a valid EF state.
+        """
+        import dataclasses
+        import pathlib
+        comp_state = getattr(trainer.backend, "comp_state", None)
+        if not comp_state:               # compression off or stateless codec
+            return
+        comp_file = pathlib.Path(self.ckpt_dir) / f"comp_{step:08d}.npz"
+        if not comp_file.exists():
+            return                       # EF newly enabled: start from zeros
+        if saved_comp != dataclasses.asdict(trainer.cfg.compression):
+            return                       # codec changed/unknown: reset
+        trainer.backend.comp_state = checkpoint.restore(
+            self.ckpt_dir, comp_state, step, name="comp")
+
     def _save(self, trainer):
         import pathlib
         st = trainer.state
         checkpoint.save(self.ckpt_dir, st.round, self._tree(st))
+        comp_state = getattr(trainer.backend, "comp_state", None)
+        if comp_state:                   # EF accumulators ride as a sidecar
+            checkpoint.save(self.ckpt_dir, st.round, comp_state, name="comp")
+        # the meta file records the config that WROTE the latest state —
+        # updated at save time (not resume start), so a resume that dies
+        # before its first save can't relabel an older codec's EF sidecar
+        # as its own for the next resume's provenance comparison
+        (pathlib.Path(self.ckpt_dir) / "experiment.json").write_text(
+            json.dumps(trainer.cfg.to_dict(), indent=1))
         self._sidecar(st.round).write_text(json.dumps(
             {"comm_bytes": st.comm_bytes, "val_acc": st.val_acc,
              "test_acc": st.test_acc, "history": st.history,
@@ -266,7 +305,8 @@ class CheckpointHook(Hook):
         checkpoint.cleanup(self.ckpt_dir, keep=self.keep)
         live = {int(f.stem.split("_")[1])
                 for f in pathlib.Path(self.ckpt_dir).glob("ckpt_*.npz")}
-        for f in pathlib.Path(self.ckpt_dir).glob("state_*.json"):
+        for f in list(pathlib.Path(self.ckpt_dir).glob("state_*.json")) + \
+                list(pathlib.Path(self.ckpt_dir).glob("comp_*.npz")):
             if int(f.stem.split("_")[1]) not in live:
                 f.unlink()
 

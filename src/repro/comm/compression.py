@@ -1,0 +1,289 @@
+"""Embedding-exchange compression for the §3.1 aggregation boundary.
+
+GLASU's lazy aggregation and stale updates reduce *how often* clients and
+server exchange embeddings; this module compresses *what* is exchanged —
+the orthogonal communication axis studied for federated GNNs (FedGCN, Yao
+et al. 2022) and limited-communication VFL (Sun et al. 2023). A
+``Compressor`` encodes a float32 embedding block into its wire
+representation (the arrays that would actually cross the network), decodes
+it back to the float32 the receiver works with, and prices one message
+exactly (``wire_bytes``), so every byte meter in the repo — analytic,
+message log, trace-recorded collectives — stays term-by-term auditable.
+
+Codecs:
+
+  * ``none`` / ``identity`` — no compression; ``make_compressor`` returns
+    ``None`` and callers take the uncompressed code path verbatim (so the
+    default configuration stays bit-identical to the historical runs).
+  * ``int8``  — per-row absmax affine quantization: each row ships as int8
+    codes plus one float32 scale (``d + 4`` bytes per ``4d``-byte row).
+    All-zero rows are guarded with a unit scale instead of dividing by 0.
+  * ``fp8``   — direct cast to ``float8_e4m3fn`` (values clipped into the
+    format's finite range first; e4m3fn has no inf and would otherwise
+    round overflow to NaN). 1 byte per element, no side channel.
+  * ``topk_ef`` — top-k magnitude sparsification: each row ships its k
+    largest-|x| entries as (float16 value, int16 column) pairs — 4k bytes
+    per row, an 8x reduction at k = d/8. With ``k >= d`` the codec
+    degenerates to identity (the dense float32 row is cheaper than
+    value+index pairs, so that is what goes on the wire).
+
+Error feedback (EF): a client that compresses its upload keeps the
+residual ``x - decode(encode(x))`` in a local accumulator and adds it to
+the *next* round's upload, so quantization error is re-injected instead of
+lost (Seide et al. 2014; mandatory for top-k to converge). The codecs
+themselves are stateless; EF is applied by the call sites via
+``roundtrip_with_ef`` wherever encode and decode happen in one place —
+the sharded uplink alone inlines the same sequence, because the
+``all_gather`` sits between its encode and decode. The accumulators live
+in the round state (see ``core.glasu.init_comp_state``), are threaded
+through the scanned round engines alongside the optimizer state, and
+persist in checkpoints.
+
+Caveat (documented, deliberate): the round engines key EF accumulators by
+*slot* (row position in the fixed-shape sampled batch), not by node id —
+the sampled node set changes every round, so slot ``i`` carries the
+residual of whatever node occupied it last round. This is the standard
+fixed-shape-pipeline formulation; it preserves the magnitude statistics EF
+needs (and is exactly zero for ``k >= d`` or identity), but it is not
+per-node EF. ``docs/BACKENDS.md`` discusses the trade-off.
+
+Everything here is pure ``jax.numpy`` on the last axis, so the codecs run
+unchanged under ``vmap``, ``lax.scan``, and ``shard_map`` — the sharded
+backend encodes *before* its ``all_gather`` so the collective itself moves
+the wire representation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPRESSION_METHODS = ("none", "identity", "int8", "fp8", "topk_ef")
+
+# methods whose uplink keeps an error-feedback accumulator by default
+_EF_DEFAULT = {"none": False, "identity": False, "int8": False, "fp8": False,
+               "topk_ef": True}
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    """Validated compression block of an ``ExperimentConfig``.
+
+    ``method`` picks the codec; ``k`` is the per-row budget of ``topk_ef``
+    (required there, forbidden elsewhere); ``error_feedback`` toggles the
+    uplink/downlink residual accumulators (default: on for ``topk_ef``,
+    off for the quantizers, where the per-round error is already zero-mean
+    and bounded by half a quantization step).
+
+    ``ef_decay`` scales the residual carried to the next round,
+    ``ef <- ef_decay * (input - decoded)``. With the round engines' slot-
+    keyed accumulators (node sets change every round, see the module
+    docstring) an undecayed residual can accumulate signal from past nodes
+    faster than top-k drains it and eventually injects stale mass into the
+    wrong node's upload — decay bounds the carry at
+    ``ef_decay / (1 - ef_decay)`` times the per-round residual. The
+    default 0.5 keeps EF's variance-reduction benefit while staying stable
+    on round-varying node sets; 1.0 recovers classic undecayed EF (safe
+    when node sets are fixed across rounds).
+    """
+
+    method: str = "none"
+    k: Optional[int] = None
+    error_feedback: Optional[bool] = None
+    ef_decay: float = 0.5
+
+    def __post_init__(self):
+        if self.method not in COMPRESSION_METHODS:
+            raise ValueError(
+                f"unknown compression method {self.method!r}; expected one "
+                f"of {COMPRESSION_METHODS}")
+        if self.method == "topk_ef":
+            if self.k is None or self.k < 1:
+                raise ValueError(
+                    "compression method 'topk_ef' requires k >= 1 "
+                    f"(got k={self.k})")
+        elif self.k is not None:
+            raise ValueError(
+                f"compression k={self.k} is only meaningful for method "
+                f"'topk_ef' (got method {self.method!r})")
+        if not 0.0 <= self.ef_decay <= 1.0:
+            raise ValueError(
+                f"ef_decay must be in [0, 1], got {self.ef_decay}")
+
+    @property
+    def resolved_error_feedback(self) -> bool:
+        if self.error_feedback is not None:
+            return bool(self.error_feedback)
+        return _EF_DEFAULT[self.method]
+
+    @property
+    def active(self) -> bool:
+        return self.method not in ("none", "identity")
+
+
+class Compressor:
+    """Wire codec: float32 block <-> wire payload + exact byte pricing.
+
+    ``encode`` maps ``(..., d)`` float32 to a dict of wire-dtype arrays
+    (the message that crosses the network); ``decode`` maps it back to
+    ``(..., d)`` float32. Decode is elementwise per row, so slicing a
+    decoded stack equals decoding the sliced payload — the sharded path
+    relies on this to update local EF from the gathered decode.
+    ``wire_bytes(n, d)`` prices one logical ``(n, d)`` message and must
+    equal the byte size of the ``encode`` output exactly (tested).
+    """
+
+    method: str = "abstract"
+    error_feedback: bool = False
+    ef_decay: float = 0.5
+
+    def encode(self, x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def decode(self, payload: Dict[str, jnp.ndarray], d: int) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def roundtrip(self, x: jnp.ndarray) -> jnp.ndarray:
+        """What the receiver reconstructs from ``x``'s wire message."""
+        return self.decode(self.encode(x), x.shape[-1])
+
+    def wire_bytes(self, n_rows: int, d: int) -> int:
+        raise NotImplementedError
+
+
+class Int8Quantizer(Compressor):
+    """Per-row absmax int8: codes in [-127, 127] + one f32 scale per row."""
+
+    method = "int8"
+
+    def encode(self, x):
+        absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        # all-zero rows: absmax == 0 would divide by zero; a unit scale
+        # encodes (and decodes) them exactly as zeros
+        scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(x / scale), -127.0, 127.0).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}
+
+    def decode(self, payload, d):
+        return payload["q"].astype(jnp.float32) * payload["scale"]
+
+    def wire_bytes(self, n_rows, d):
+        return n_rows * d + n_rows * 4
+
+
+class FloatQuantizer(Compressor):
+    """Direct cast to a narrow float format (fp8 e4m3 by default).
+
+    Values are clipped into the target's finite range first: e4m3fn has no
+    inf, so an unclipped overflow would round to NaN and poison the
+    aggregate. No per-row side channel — 1 byte/element for fp8.
+    """
+
+    method = "fp8"
+
+    def __init__(self, dtype=jnp.float8_e4m3fn):
+        self.dtype = dtype
+        self._max = float(jnp.finfo(dtype).max)
+        self._itemsize = jnp.dtype(dtype).itemsize
+
+    def encode(self, x):
+        return {"q": jnp.clip(x, -self._max, self._max).astype(self.dtype)}
+
+    def decode(self, payload, d):
+        return payload["q"].astype(jnp.float32)
+
+    def wire_bytes(self, n_rows, d):
+        return n_rows * d * self._itemsize
+
+
+class TopKCompressor(Compressor):
+    """Top-k magnitude sparsification: (f16 value, i16 column) pairs.
+
+    Keeps the k largest-|x| entries per row. With ``k >= d`` the whole row
+    survives, and the codec sends the dense float32 row instead (4d bytes
+    beats the 6d of value+index pairs) — exact identity, zero residual.
+    """
+
+    method = "topk_ef"
+    error_feedback = True
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"top-k needs k >= 1, got {k}")
+        self.k = int(k)
+
+    # f16 has no inf-free format: clip into the finite range like the fp8
+    # codec (an unclipped overflow would ship inf and poison the mean);
+    # the clipped-off magnitude lands in the EF residual.
+    _F16_MAX = 65504.0
+    # i16 covers d <= 32768 columns (indices are 0-based); wider rows
+    # (huge concat broadcasts) ship i32 — silently wrapped indices would
+    # scatter out of bounds and be DROPPED under jit, no error raised
+    _I16_COLS = 2 ** 15
+
+    def encode(self, x):
+        d = x.shape[-1]
+        if self.k >= d:
+            return {"dense": x}
+        _, idx = jax.lax.top_k(jnp.abs(x), self.k)
+        vals = jnp.take_along_axis(x, idx, axis=-1)
+        vals = jnp.clip(vals, -self._F16_MAX, self._F16_MAX)
+        idx_dtype = jnp.int16 if d <= self._I16_COLS else jnp.int32
+        return {"v": vals.astype(jnp.float16), "i": idx.astype(idx_dtype)}
+
+    def decode(self, payload, d):
+        if "dense" in payload:
+            return payload["dense"]
+        v = payload["v"].astype(jnp.float32)
+        i = payload["i"].astype(jnp.int32)
+        lead = v.shape[:-1]
+        flat_v = v.reshape(-1, self.k)
+        flat_i = i.reshape(-1, self.k)
+        rows = jnp.arange(flat_v.shape[0])[:, None]
+        out = jnp.zeros((flat_v.shape[0], d), jnp.float32)
+        out = out.at[rows, flat_i].set(flat_v)
+        return out.reshape(lead + (d,))
+
+    def wire_bytes(self, n_rows, d):
+        if self.k >= d:
+            return n_rows * d * 4
+        idx_bytes = 2 if d <= self._I16_COLS else 4
+        return n_rows * self.k * (2 + idx_bytes)
+
+
+def make_compressor(cfg: Optional[CompressionConfig]) -> Optional[Compressor]:
+    """Build the codec for a compression block; ``None`` means 'take the
+    uncompressed code path' (for ``None`` config, ``none``/``identity``)."""
+    if cfg is None or not cfg.active:
+        return None
+    if cfg.method == "int8":
+        comp: Compressor = Int8Quantizer()
+    elif cfg.method == "fp8":
+        comp = FloatQuantizer()
+    elif cfg.method == "topk_ef":
+        comp = TopKCompressor(cfg.k)
+    else:  # pragma: no cover — CompressionConfig already validated
+        raise ValueError(f"unknown compression method {cfg.method!r}")
+    comp.error_feedback = cfg.resolved_error_feedback
+    comp.ef_decay = cfg.ef_decay
+    return comp
+
+
+def roundtrip_with_ef(comp: Compressor, x: jnp.ndarray,
+                      ef: Optional[jnp.ndarray]
+                      ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                                 Optional[jnp.ndarray]]:
+    """Compress ``x`` (plus the carried residual) through the wire.
+
+    Returns ``(payload, x_hat, new_ef)``: the wire message, what the
+    receiver reconstructs, and the sender's updated residual accumulator
+    scaled by ``comp.ef_decay`` (``None`` in iff ``None`` out — error
+    feedback disabled).
+    """
+    x_in = x if ef is None else x + ef
+    payload = comp.encode(x_in)
+    x_hat = comp.decode(payload, x.shape[-1])
+    new_ef = None if ef is None else comp.ef_decay * (x_in - x_hat)
+    return payload, x_hat, new_ef

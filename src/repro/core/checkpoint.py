@@ -32,14 +32,19 @@ def _flatten(tree) -> Tuple[dict, str]:
                                "treedef": str(treedef)})
 
 
-def save(ckpt_dir: str, step: int, tree: Any) -> str:
+def save(ckpt_dir: str, step: int, tree: Any, name: str = "ckpt") -> str:
+    """Save a pytree as ``<name>_<step>.npz``. ``name="ckpt"`` is the main
+    training state and advances the LATEST pointer; other names (e.g.
+    ``"comp"`` for error-feedback accumulators) are step-aligned sidecars.
+    """
     path = Path(ckpt_dir)
     path.mkdir(parents=True, exist_ok=True)
     arrays, meta = _flatten(tree)
-    fn = path / f"ckpt_{step:08d}.npz"
+    fn = path / f"{name}_{step:08d}.npz"
     np.savez(fn, __meta__=np.frombuffer(meta.encode(), dtype=np.uint8),
              **arrays)
-    (path / "LATEST").write_text(str(step))
+    if name == "ckpt":
+        (path / "LATEST").write_text(str(step))
     return str(fn)
 
 
@@ -50,12 +55,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(p.read_text().strip())
 
 
-def restore(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            name: str = "ckpt") -> Any:
     """Restore into the structure/dtypes of ``like`` (an example pytree)."""
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    fn = Path(ckpt_dir) / f"ckpt_{step:08d}.npz"
+    fn = Path(ckpt_dir) / f"{name}_{step:08d}.npz"
     data = np.load(fn)
     meta = json.loads(bytes(data["__meta__"]).decode())
     import jax.numpy as jnp
@@ -76,3 +82,7 @@ def cleanup(ckpt_dir: str, keep: int = 3):
     files = sorted(Path(ckpt_dir).glob("ckpt_*.npz"))
     for f in files[:-keep]:
         f.unlink()
+    # sidecars (comp_*.npz EF state, state_*.json loop state) are pruned
+    # by CheckpointHook against the surviving ckpt steps — step-aligned,
+    # not count-based, so a run that stops writing a sidecar kind doesn't
+    # strand stale files

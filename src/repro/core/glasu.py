@@ -19,12 +19,15 @@ using the paper's cost model.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..comm import compression
+from ..comm.compression import CompressionConfig, Compressor
 from ..graph.sampler import SampledBatch
 from ..models.gnn import BACKBONES
 from ..optim import optimizers as opt_lib
@@ -48,6 +51,7 @@ class GlasuConfig:
     secure_agg: bool = False              # §3.6 SA hook (cancelling masks)
     labels_at_client: Optional[int] = None  # Appendix B.2 (Alg 5-7): one label owner
     use_pallas: bool = False              # fused Pallas kernels (GCN/GCNII/GAT)
+    compression: Optional[CompressionConfig] = None  # wire codec at the Agg boundary
 
     def __post_init__(self):
         if self.agg_layers:
@@ -55,6 +59,10 @@ class GlasuConfig:
                 "prediction layer input must be aggregated (paper §3.1)"
         if self.agg == "concat":
             assert self.backbone == "gcn", "concat aggregation implemented for GCN"
+        if self.compression is not None and self.compression.active:
+            assert not self.secure_agg, \
+                "secure_agg masks cancel only exactly; quantized/sparsified " \
+                "uploads break the pairwise cancellation (disable one)"
 
     def layer_in_dim(self, l: int) -> int:
         """Input width of layer l (concat widens post-aggregation layers)."""
@@ -173,6 +181,129 @@ def _combine_with_stale(cfg: GlasuConfig, stale_l, h_plus_m, m_index=None):
     return stale_l + own.reshape(n, cfg.n_clients * h)
 
 
+# ------------------------------------------------------ compressed exchange
+def init_comp_state(cfg: GlasuConfig, layer_sizes: Sequence[int],
+                    compressor: Optional[Compressor] = None):
+    """Error-feedback accumulators for the compressed embedding exchange.
+
+    Returns ``None`` when compression is off (callers take the legacy code
+    path), ``{}`` when compression is on without error feedback (stateless
+    codecs thread an empty carry), else per aggregation layer one uplink
+    accumulator (client-resident, shape ``(M, n_{l+1}, hidden)``) and one
+    downlink accumulator (server-resident, ``(n_{l+1}, h_agg)``).
+    ``layer_sizes`` is the sampler's static node-set size plan
+    (``GlasuSampler.layer_sizes``, length L+1).
+    """
+    comp = compressor if compressor is not None else \
+        compression.make_compressor(cfg.compression)
+    if comp is None:
+        return None
+    if not comp.error_feedback:
+        return {}
+    down_h = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
+    state = {}
+    for l in cfg.agg_layers:
+        n = layer_sizes[l + 1]
+        state[l] = {
+            "up": jnp.zeros((cfg.n_clients, n, cfg.hidden), jnp.float32),
+            "down": jnp.zeros((n, down_h), jnp.float32)}
+    return state
+
+
+def _payload_msg_bytes(payload, lead_dims: int) -> int:
+    """Static wire size of ONE message in a payload whose leaves carry
+    ``lead_dims`` leading batch axes (0 = the payload IS one message)."""
+    return sum(math.prod(leaf.shape[lead_dims:]) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(payload))
+
+
+def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
+                          key=None, *, gather=None, i0=0, record=None,
+                          layer: int = -1):
+    """Server Agg (§3.1) with wire compression on both exchange legs.
+
+    ``h_plus``: ``(m_blk, n, h)`` fresh client uploads — the full client
+    stack on the vmapped path, the device-local block under ``shard_map``
+    (then ``gather`` stacks payload leaves along the global client axis and
+    ``i0`` is the block's global offset). ``ef_l`` is the layer's
+    error-feedback entry (``{"up", "down"}``) or ``None``.
+
+    Protocol (what a deployed system would do):
+      1. client m adds DP noise (§3.6) and its carried residual, encodes,
+         and uploads the wire payload;
+      2. the server decodes all uploads, aggregates (`mean`/`concat` on the
+         DEQUANTIZED values), adds the downlink residual, encodes, and
+         broadcasts the compressed aggregate;
+      3. client m decodes the broadcast, subtracts its own dequantized
+         upload (Extract — it knows its own wire message exactly) to get
+         the stale buffer H_{-m}, and continues forward with
+         Agg(H_{-m}, H_m^+) — its exact fresh block plus the compressed
+         view of everyone else.
+
+    Returns ``(h, stale, new_ef_l)`` with ``h``/``stale`` of shape
+    ``(m_blk, n, h_agg)`` and ``new_ef_l`` ``None`` iff ``ef_l`` was.
+    Decode is elementwise per row, so slicing the decoded global stack
+    equals decoding the local payload — the local EF update relies on it.
+    """
+    m = cfg.n_clients
+    m_blk = h_plus.shape[0]
+    uploads = h_plus
+    if cfg.dp_sigma > 0.0 and key is not None:
+        # the global (M, n, h) draw is generated everywhere and sliced so
+        # the sharded path adds bit-identical noise to the vmapped one
+        nkey = jax.random.fold_in(key, 1)
+        noise = cfg.dp_sigma * jax.random.normal(
+            nkey, (m,) + h_plus.shape[1:], h_plus.dtype)
+        if m_blk != m:
+            noise = jax.lax.dynamic_slice_in_dim(noise, i0, m_blk, axis=0)
+        uploads = uploads + noise
+    ef_up = ef_l["up"] if ef_l is not None else None
+    up_in = uploads if ef_up is None else uploads + ef_up
+    payload = comp.encode(up_in)                        # client -> server
+    wire = payload if gather is None else jax.tree.map(gather, payload)
+    up_hat = comp.decode(wire, h_plus.shape[-1])        # (M, n, h) at server
+    up_hat_blk = up_hat if m_blk == m else \
+        jax.lax.dynamic_slice_in_dim(up_hat, i0, m_blk, axis=0)
+    # the carried residual is decayed: accumulators are slot-keyed while
+    # the sampled node set changes every round (not true per-node EF) —
+    # see CompressionConfig.ef_decay for why undecayed carry destabilizes
+    new_ef_up = None if ef_up is None else \
+        comp.ef_decay * (up_in - up_hat_blk)
+
+    n, h = up_hat.shape[1], up_hat.shape[2]
+    if cfg.agg == "mean":
+        agg = jnp.mean(up_hat, axis=0)                  # (n, h)
+    else:
+        agg = jnp.transpose(up_hat, (1, 0, 2)).reshape(n, m * h)
+    ef_down = ef_l["down"] if ef_l is not None else None
+    down_payload, down_hat, new_ef_down = compression.roundtrip_with_ef(
+        comp, agg, ef_down)                             # server -> clients
+
+    if record is not None:
+        record(CollectiveRecord(
+            layer=layer, n_clients=m, n_rows=n, width_up=h,
+            width_down=agg.shape[-1],
+            itemsize=jnp.dtype(h_plus.dtype).itemsize,
+            up_bytes=_payload_msg_bytes(payload, 1),
+            down_bytes=_payload_msg_bytes(down_payload, 0)))
+
+    if cfg.agg == "mean":
+        stale = down_hat[None] - up_hat_blk / m         # Extract per client
+    else:
+        own_block = jnp.eye(m, dtype=h_plus.dtype)
+        blockmask = jnp.repeat(1.0 - own_block, h, axis=1)   # (M, M*h)
+        if m_blk != m:
+            blockmask = jax.lax.dynamic_slice_in_dim(blockmask, i0, m_blk,
+                                                     axis=0)
+        stale = down_hat[None] * blockmask[:, None, :]
+    g_idx = i0 + jnp.arange(m_blk)
+    h_out = jax.vmap(lambda s, hp, g: _combine_with_stale(cfg, s, hp, g))(
+        stale, h_plus, g_idx)
+    new_ef_l = None if ef_l is None else {"up": new_ef_up,
+                                          "down": new_ef_down}
+    return h_out, stale, new_ef_l
+
+
 # ------------------------------------------------------------------- forward
 def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_index,
                   stale: Optional[Dict[int, Any]] = None,
@@ -206,15 +337,22 @@ def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_in
     return logits
 
 
-def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None):
+def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None,
+                    compressor: Optional[Compressor] = None, comp_state=None):
     """Alg 3: full split-model forward with server aggregation at l in I.
 
-    Returns (logits (M, S, C), stale {l: (M, n_{l+1}, h_agg)}).
+    Returns (logits (M, S, C), stale {l: (M, n_{l+1}, h_agg)}). With a
+    ``compressor``, the embedding exchange at every aggregation layer runs
+    through the wire codec (see ``_compressed_aggregate``) and a third
+    value — the updated error-feedback state — is returned. Callers that
+    probe model math (``Backend.joint_logits``) pass no compressor and get
+    the exact uncompressed forward.
     """
     feats = batch.feats
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
     h0 = h
     stale: Dict[int, Any] = {}
+    new_state: Dict[int, Any] = {}
     for l in range(cfg.n_layers):
         layer = _client_layer(cfg, l)
         h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
@@ -222,11 +360,20 @@ def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None):
         h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
         if l in cfg.agg_layers:
             subkey = jax.random.fold_in(key, l) if key is not None else None
-            h, stale[l] = _aggregate(cfg, h_plus, subkey)
+            if compressor is None:
+                h, stale[l] = _aggregate(cfg, h_plus, subkey)
+            else:
+                ef_l = comp_state.get(l) if comp_state else None
+                h, stale[l], new_ef = _compressed_aggregate(
+                    cfg, compressor, h_plus, ef_l, subkey, layer=l)
+                if new_ef is not None:
+                    new_state[l] = new_ef
         else:
             h = h_plus
     logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
-    return logits, stale
+    if compressor is None:
+        return logits, stale
+    return logits, stale, new_state
 
 
 def client_loss(params_m, feats_m, batch: SampledBatch, stale_m, labels,
@@ -299,29 +446,56 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
 
 
 def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer, params,
-                opt_state, batch: SampledBatch, key):
-    """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates."""
+                opt_state, batch: SampledBatch, key,
+                compressor: Optional[Compressor] = None, comp_state=None):
+    """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates.
+
+    With a compressor, the JointInference exchange runs compressed and the
+    error-feedback carry is threaded: returns a 4-tuple
+    ``(params, opt_state, comp_state, losses)`` instead of the legacy 3.
+    """
     if cfg.agg_layers:
-        _, stale = joint_inference(params, batch, cfg, key)
+        if compressor is None:
+            _, stale = joint_inference(params, batch, cfg, key)
+        else:
+            _, stale, comp_state = joint_inference(params, batch, cfg, key,
+                                                   compressor, comp_state)
     else:
         # standalone: no communication; zero stale buffers never used
         stale = {}
     g_hl = None
     if cfg.labels_at_client is not None:
         g_hl = label_owner_grad(params, batch, stale, cfg)
-    return local_update_steps(
+    params, opt_state, losses = local_update_steps(
         params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
+    if compressor is None:
+        return params, opt_state, losses
+    return params, opt_state, comp_state, losses
 
 
 def make_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer):
     """One jitted GLASU round; kept for per-round callers (simulation parity
-    probes, unit tests). The training hot path is ``make_multi_round_fn``."""
+    probes, unit tests). The training hot path is ``make_multi_round_fn``.
+
+    With ``cfg.compression`` active the returned function threads the
+    error-feedback carry: ``(params, opt_state, comp_state, batch, key) ->
+    (params, opt_state, comp_state, losses)``; otherwise the legacy
+    4-arg/3-result signature is unchanged (bit-identical code path).
+    """
+    comp = compression.make_compressor(cfg.compression)
+    if comp is None:
+        @jax.jit
+        def round_fn(params, opt_state, batch: SampledBatch, key):
+            return _round_body(cfg, optimizer, params, opt_state, batch, key)
+
+        return round_fn
 
     @jax.jit
-    def round_fn(params, opt_state, batch: SampledBatch, key):
-        return _round_body(cfg, optimizer, params, opt_state, batch, key)
+    def round_fn_c(params, opt_state, comp_state, batch: SampledBatch, key):
+        return _round_body(cfg, optimizer, params, opt_state, batch, key,
+                           comp, comp_state)
 
-    return round_fn
+    return round_fn_c
 
 
 def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
@@ -348,30 +522,51 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     ``rounds_per_step`` is an optional static hint: when given, a batch
     whose leading axis disagrees is rejected loudly instead of silently
     scanning a different number of rounds.
+
+    With ``cfg.compression`` active the error-feedback accumulators ride in
+    the scan carry next to the optimizer state and are donated with it:
+    ``(params, opt_state, comp_state, batches, keys) ->
+    (params, opt_state, comp_state, losses)``.
     """
+    comp = compression.make_compressor(cfg.compression)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def step_fn(params, opt_state, batches: SampledBatch, keys):
-        def body(carry, xs):
-            p, s = carry
-            batch, key = xs
-            p, s, losses = _round_body(cfg, optimizer, p, s, batch, key)
-            return (p, s), losses
+    if comp is None:
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def step_fn(params, opt_state, batches: SampledBatch, keys):
+            def body(carry, xs):
+                p, s = carry
+                batch, key = xs
+                p, s, losses = _round_body(cfg, optimizer, p, s, batch, key)
+                return (p, s), losses
 
-        (params, opt_state), losses = jax.lax.scan(
-            body, (params, opt_state), (batches, keys))
-        return params, opt_state, losses          # losses: (K, Q)
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), (batches, keys))
+            return params, opt_state, losses          # losses: (K, Q)
+    else:
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+        def step_fn(params, opt_state, comp_state, batches: SampledBatch,
+                    keys):
+            def body(carry, xs):
+                p, s, cs = carry
+                batch, key = xs
+                p, s, cs, losses = _round_body(cfg, optimizer, p, s, batch,
+                                               key, comp, cs)
+                return (p, s, cs), losses
+
+            (params, opt_state, comp_state), losses = jax.lax.scan(
+                body, (params, opt_state, comp_state), (batches, keys))
+            return params, opt_state, comp_state, losses
 
     if rounds_per_step is None:
         return step_fn
 
-    def checked(params, opt_state, batches, keys):
-        k = batches.labels.shape[0]
+    def checked(*args):
+        k = args[-2].labels.shape[0]
         if k != rounds_per_step:
             raise ValueError(
                 f"multi-round step built for rounds_per_step="
                 f"{rounds_per_step} got a {k}-round batch stack")
-        return step_fn(params, opt_state, batches, keys)
+        return step_fn(*args)
 
     checked._jit = step_fn                       # expose cache introspection
     return checked
@@ -392,19 +587,27 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
 # returns the aggregate).
 
 class CollectiveRecord(NamedTuple):
-    """One cross-client collective, recorded while tracing the round body."""
+    """One cross-client collective, recorded while tracing the round body.
+
+    ``up_bytes``/``down_bytes`` are the WIRE sizes of one client upload and
+    one server broadcast — equal to ``n_rows * width * itemsize`` for the
+    uncompressed exchange, and read off the actual encoded payload leaves
+    when a compressor runs (the ``all_gather`` then moves the compressed
+    representation, so these are what the compiled collective ships).
+    """
     layer: int          # aggregation layer index l
     n_clients: int      # M (global)
     n_rows: int         # n_{l+1} rows per upload
     width_up: int       # per-client upload width (hidden)
     width_down: int     # aggregate width broadcast back (hidden | M*hidden)
-    itemsize: int       # payload dtype bytes
+    itemsize: int       # logical (pre-compression) payload dtype bytes
+    up_bytes: int       # wire bytes of ONE client upload message
+    down_bytes: int     # wire bytes of ONE broadcast message
 
     def star_bytes(self) -> int:
         """Bytes under the paper's client<->server star topology (§3.2):
-        M uploads of (n, width_up) + M downloads of (n, width_down)."""
-        return self.n_clients * self.n_rows * (
-            self.width_up + self.width_down) * self.itemsize
+        M uploads + M downloads at their wire sizes."""
+        return self.n_clients * (self.up_bytes + self.down_bytes)
 
 
 def _gather_clients(x, axis_name: str):
@@ -413,7 +616,9 @@ def _gather_clients(x, axis_name: str):
 
 def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
                             key=None, *, axis_name: str, m_loc: int,
-                            record=None):
+                            record=None,
+                            compressor: Optional[Compressor] = None,
+                            comp_state=None):
     """Alg 3 under shard_map: per-device client blocks, collective Agg.
 
     All array leaves of ``params``/``batch`` carry the LOCAL client block
@@ -423,6 +628,15 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     the same values as the vmapped path — then the device keeps its local
     slice of the broadcast aggregate and the Extract (stale) buffers.
 
+    With a ``compressor``, each device ENCODES its local block first and
+    the ``all_gather`` moves the wire payload (int8 codes + scales, fp8,
+    or top-k value/index pairs) — the collective itself shrinks, not just
+    the metered number. Decode, aggregation, and the compressed downlink
+    then run replicated on the gathered payload (``_compressed_aggregate``
+    with the device's global block offset), and the device keeps the local
+    block of the error-feedback carry. Returns a third value (the updated
+    comp state) in that mode.
+
     Returns (local logits (m_loc, S, C), stale {l: (m_loc, n_{l+1}, h_agg)}).
     ``record``, when given, is called with a ``CollectiveRecord`` per
     aggregation layer at trace time (the byte meter's measurement hook).
@@ -430,6 +644,7 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], batch.feats)
     h0 = h
     stale: Dict[int, Any] = {}
+    new_state: Dict[int, Any] = {}
     i0 = jax.lax.axis_index(axis_name) * m_loc
     for l in range(cfg.n_layers):
         layer = _client_layer(cfg, l)
@@ -438,21 +653,34 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
         h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
         if l in cfg.agg_layers:
             subkey = jax.random.fold_in(key, l) if key is not None else None
-            uploads = _gather_clients(h_plus, axis_name)       # (M, n, h)
-            h_full, stale_full = _aggregate(cfg, uploads, subkey)
-            if record is not None:
-                record(CollectiveRecord(
-                    layer=l, n_clients=uploads.shape[0],
-                    n_rows=uploads.shape[1], width_up=uploads.shape[2],
-                    width_down=h_full.shape[-1],
-                    itemsize=jnp.dtype(uploads.dtype).itemsize))
-            h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
-            stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0, m_loc,
-                                                    axis=0)
+            if compressor is None:
+                uploads = _gather_clients(h_plus, axis_name)   # (M, n, h)
+                h_full, stale_full = _aggregate(cfg, uploads, subkey)
+                if record is not None:
+                    isz = jnp.dtype(uploads.dtype).itemsize
+                    record(CollectiveRecord(
+                        layer=l, n_clients=uploads.shape[0],
+                        n_rows=uploads.shape[1], width_up=uploads.shape[2],
+                        width_down=h_full.shape[-1], itemsize=isz,
+                        up_bytes=uploads.shape[1] * uploads.shape[2] * isz,
+                        down_bytes=uploads.shape[1] * h_full.shape[-1] * isz))
+                h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
+                stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0,
+                                                        m_loc, axis=0)
+            else:
+                ef_l = comp_state.get(l) if comp_state else None
+                h, stale[l], new_ef = _compressed_aggregate(
+                    cfg, compressor, h_plus, ef_l, subkey,
+                    gather=lambda x: _gather_clients(x, axis_name),
+                    i0=i0, record=record, layer=l)
+                if new_ef is not None:
+                    new_state[l] = new_ef
         else:
             h = h_plus
     logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
-    return logits, stale
+    if compressor is None:
+        return logits, stale
+    return logits, stale, new_state
 
 
 def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
@@ -490,20 +718,35 @@ def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
 
 def _sharded_round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
                         axis_name: str, m_loc: int, params, opt_state,
-                        batch: SampledBatch, key, record=None):
-    """One GLASU round on local client blocks (Alg 1 body under shard_map)."""
+                        batch: SampledBatch, key, record=None,
+                        compressor: Optional[Compressor] = None,
+                        comp_state=None):
+    """One GLASU round on local client blocks (Alg 1 body under shard_map).
+
+    With a compressor the error-feedback carry is threaded (uplink
+    accumulators hold the LOCAL client block, the downlink accumulator is
+    replicated) and a 4-tuple is returned.
+    """
     if cfg.labels_at_client is not None:
         raise NotImplementedError(
             "labels_at_client requires indexing the global client axis "
             "(Alg 6 owner gradient); use the vmapped backend")
     if cfg.agg_layers:
-        _, stale = sharded_joint_inference(params, batch, cfg, key,
-                                           axis_name=axis_name, m_loc=m_loc,
-                                           record=record)
+        if compressor is None:
+            _, stale = sharded_joint_inference(params, batch, cfg, key,
+                                               axis_name=axis_name,
+                                               m_loc=m_loc, record=record)
+        else:
+            _, stale, comp_state = sharded_joint_inference(
+                params, batch, cfg, key, axis_name=axis_name, m_loc=m_loc,
+                record=record, compressor=compressor, comp_state=comp_state)
     else:
         stale = {}
-    return _sharded_local_update_steps(cfg, optimizer, params, opt_state,
-                                       batch, stale, axis_name, m_loc)
+    params, opt_state, losses = _sharded_local_update_steps(
+        cfg, optimizer, params, opt_state, batch, stale, axis_name, m_loc)
+    if compressor is None:
+        return params, opt_state, losses
+    return params, opt_state, comp_state, losses
 
 
 def _client_axis_check(cfg: GlasuConfig, mesh, axis: str) -> int:
@@ -549,6 +792,18 @@ def _sharded_specs(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     return pspecs, ospecs, bspecs
 
 
+def _comp_state_specs(cfg: GlasuConfig, comp: Optional[Compressor],
+                      axis: str):
+    """shard_map specs for the error-feedback carry: uplink accumulators
+    are client-stacked (sharded over ``axis``), the downlink accumulator is
+    server state (replicated). ``{}`` for stateless codecs."""
+    from jax.sharding import PartitionSpec as P
+
+    if comp is None or not comp.error_feedback:
+        return {}
+    return {l: {"up": P(axis), "down": P()} for l in cfg.agg_layers}
+
+
 def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
                           mesh, axis: str = "clients", record=None,
                           jit: bool = True):
@@ -556,18 +811,34 @@ def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
 
     ``record`` (see ``CollectiveRecord``) observes the aggregation
     collectives at trace time; ``jit=False`` returns the bare shard_map'd
-    callable, which is what the byte meter abstractly evaluates at bind."""
+    callable, which is what the byte meter abstractly evaluates at bind.
+    With ``cfg.compression`` active the signature gains the error-feedback
+    carry: ``(params, opt_state, comp_state, batch, key)``."""
     from jax.experimental.shard_map import shard_map
 
     m_loc = _client_axis_check(cfg, mesh, axis)
     pspecs, ospecs, bspecs = _sharded_specs(cfg, optimizer, axis)
     from jax.sharding import PartitionSpec as P
 
-    body = functools.partial(_sharded_round_body, cfg, optimizer, axis,
-                             m_loc, record=record)
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(pspecs, ospecs, bspecs, P()),
-                   out_specs=(pspecs, ospecs, P()), check_rep=False)
+    comp = compression.make_compressor(cfg.compression)
+    if comp is None:
+        body = functools.partial(_sharded_round_body, cfg, optimizer, axis,
+                                 m_loc, record=record)
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(pspecs, ospecs, bspecs, P()),
+                       out_specs=(pspecs, ospecs, P()), check_rep=False)
+        return jax.jit(fn) if jit else fn
+
+    cspecs = _comp_state_specs(cfg, comp, axis)
+
+    def body_c(params, opt_state, comp_state, batch, key):
+        return _sharded_round_body(cfg, optimizer, axis, m_loc, params,
+                                   opt_state, batch, key, record=record,
+                                   compressor=comp, comp_state=comp_state)
+
+    fn = shard_map(body_c, mesh=mesh,
+                   in_specs=(pspecs, ospecs, cspecs, bspecs, P()),
+                   out_specs=(pspecs, ospecs, cspecs, P()), check_rep=False)
     return jax.jit(fn) if jit else fn
 
 
@@ -584,35 +855,59 @@ def make_sharded_multi_round_fn(cfg: GlasuConfig,
     m_loc = _client_axis_check(cfg, mesh, axis)
     pspecs, ospecs, _ = _sharded_specs(cfg, optimizer, axis)
     _, _, bspecs_k = _sharded_specs(cfg, optimizer, axis, round_stacked=True)
+    comp = compression.make_compressor(cfg.compression)
 
-    def scan_body(params, opt_state, batches, keys):
-        def body(carry, xs):
-            p, s = carry
-            batch, key = xs
-            p, s, losses = _sharded_round_body(cfg, optimizer, axis, m_loc,
-                                               p, s, batch, key)
-            return (p, s), losses
+    if comp is None:
+        def scan_body(params, opt_state, batches, keys):
+            def body(carry, xs):
+                p, s = carry
+                batch, key = xs
+                p, s, losses = _sharded_round_body(cfg, optimizer, axis,
+                                                   m_loc, p, s, batch, key)
+                return (p, s), losses
 
-        (params, opt_state), losses = jax.lax.scan(
-            body, (params, opt_state), (batches, keys))
-        return params, opt_state, losses          # losses: (K, Q)
+            (params, opt_state), losses = jax.lax.scan(
+                body, (params, opt_state), (batches, keys))
+            return params, opt_state, losses          # losses: (K, Q)
 
-    step_fn = jax.jit(
-        shard_map(scan_body, mesh=mesh,
-                  in_specs=(pspecs, ospecs, bspecs_k, P()),
-                  out_specs=(pspecs, ospecs, P()), check_rep=False),
-        donate_argnums=(0, 1))
+        step_fn = jax.jit(
+            shard_map(scan_body, mesh=mesh,
+                      in_specs=(pspecs, ospecs, bspecs_k, P()),
+                      out_specs=(pspecs, ospecs, P()), check_rep=False),
+            donate_argnums=(0, 1))
+    else:
+        cspecs = _comp_state_specs(cfg, comp, axis)
+
+        def scan_body_c(params, opt_state, comp_state, batches, keys):
+            def body(carry, xs):
+                p, s, cs = carry
+                batch, key = xs
+                p, s, cs, losses = _sharded_round_body(
+                    cfg, optimizer, axis, m_loc, p, s, batch, key,
+                    compressor=comp, comp_state=cs)
+                return (p, s, cs), losses
+
+            (params, opt_state, comp_state), losses = jax.lax.scan(
+                body, (params, opt_state, comp_state), (batches, keys))
+            return params, opt_state, comp_state, losses
+
+        step_fn = jax.jit(
+            shard_map(scan_body_c, mesh=mesh,
+                      in_specs=(pspecs, ospecs, cspecs, bspecs_k, P()),
+                      out_specs=(pspecs, ospecs, cspecs, P()),
+                      check_rep=False),
+            donate_argnums=(0, 1, 2))
 
     if rounds_per_step is None:
         return step_fn
 
-    def checked(params, opt_state, batches, keys):
-        k = batches.labels.shape[0]
+    def checked(*args):
+        k = args[-2].labels.shape[0]
         if k != rounds_per_step:
             raise ValueError(
                 f"sharded multi-round step built for rounds_per_step="
                 f"{rounds_per_step} got a {k}-round batch stack")
-        return step_fn(params, opt_state, batches, keys)
+        return step_fn(*args)
 
     checked._jit = step_fn
     return checked

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..comm import compression
+from ..comm.compression import Compressor
 from ..core import glasu
 from ..core.glasu import GlasuConfig
 from ..graph.sampler import SampledBatch
@@ -35,9 +37,17 @@ class MessageLog:
     messages: List[Message] = field(default_factory=list)
 
     def send(self, sender, receiver, kind, layer, payload):
-        nbytes = int(np.asarray(payload).size
-                     * np.asarray(payload).dtype.itemsize)
-        self.messages.append(Message(sender, receiver, kind, layer, nbytes))
+        """Log one message; ``payload`` is an array or a pytree of arrays
+        (a compressed wire message: codes + scales, values + indices)."""
+        nbytes = sum(int(np.asarray(leaf).size
+                         * np.asarray(leaf).dtype.itemsize)
+                     for leaf in jax.tree.leaves(payload))
+        self.send_nbytes(sender, receiver, kind, layer, nbytes)
+
+    def send_nbytes(self, sender, receiver, kind, layer, nbytes: int):
+        """Log one message by its exact wire size (shape-only replays)."""
+        self.messages.append(Message(sender, receiver, kind, layer,
+                                     int(nbytes)))
 
     def total_bytes(self, kind=None) -> int:
         return sum(m.nbytes for m in self.messages
@@ -46,18 +56,31 @@ class MessageLog:
 
 def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
                              log: MessageLog = None,
-                             return_stale: bool = False):
+                             return_stale: bool = False,
+                             compressor: Compressor = None, comp_state=None):
     """Alg 3 with explicit messages. Returns (per-client logits, log), or
     (logits, stale, log) with ``return_stale=True`` where ``stale`` is the
     Extract buffer dict {l: (M, n_{l+1}, h)} matching ``glasu.joint_inference``.
 
     Mean aggregation; per-client python loop (no vmap) so the computation is
     an independent implementation of the same algebra.
+
+    With a ``compressor`` the exchange is compressed message-by-message:
+    each client encodes its upload (plus its error-feedback residual when
+    ``comp_state`` carries one) and the LOGGED payload is the actual wire
+    message — the byte audit stays term-by-term exact. The server decodes,
+    aggregates the dequantized uploads, and broadcasts the compressed
+    aggregate; each client reconstructs its stale buffer from the decoded
+    broadcast minus its own dequantized upload and continues forward with
+    its exact fresh block (the same protocol as
+    ``glasu._compressed_aggregate``, implemented independently). In that
+    mode the return tuples gain a trailing ``new_comp_state``.
     """
     assert cfg.agg == "mean"
     m_clients = cfg.n_clients
     log = log if log is not None else MessageLog()
     stale: Dict[int, Any] = {}
+    new_state: Dict[int, Any] = {}
 
     h = []
     h0 = []
@@ -77,15 +100,42 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
             h_plus.append(hp)
             h0[m] = h0[m][batch.self_pos[l][m]]
         if l in cfg.agg_layers:
-            for m in range(m_clients):                 # uploads
-                log.send(f"client{m}", "server", "upload", l, h_plus[m])
-            agg = sum(h_plus) / m_clients              # server mean (Agg)
-            for m in range(m_clients):                 # broadcasts
-                log.send("server", f"client{m}", "broadcast", l, agg)
-                h[m] = agg
-            # Extract(H, H_m^+): the all-but-m buffer each client retains
-            stale[l] = jnp.stack([agg - h_plus[m] / m_clients
-                                  for m in range(m_clients)])
+            if compressor is None:
+                for m in range(m_clients):             # uploads
+                    log.send(f"client{m}", "server", "upload", l, h_plus[m])
+                agg = sum(h_plus) / m_clients          # server mean (Agg)
+                for m in range(m_clients):             # broadcasts
+                    log.send("server", f"client{m}", "broadcast", l, agg)
+                    h[m] = agg
+                # Extract(H, H_m^+): the all-but-m buffer each client keeps
+                stale[l] = jnp.stack([agg - h_plus[m] / m_clients
+                                      for m in range(m_clients)])
+            else:
+                ef_l = comp_state.get(l) if comp_state else None
+                up_hats, new_ef_up = [], []
+                for m in range(m_clients):             # compressed uploads
+                    payload, x_hat, ef_m = compression.roundtrip_with_ef(
+                        compressor, h_plus[m],
+                        None if ef_l is None else ef_l["up"][m])
+                    log.send(f"client{m}", "server", "upload", l, payload)
+                    up_hats.append(x_hat)
+                    if ef_m is not None:
+                        new_ef_up.append(ef_m)
+                agg = sum(up_hats) / m_clients         # mean of dequantized
+                down_payload, down_hat, ef_down = \
+                    compression.roundtrip_with_ef(
+                        compressor, agg,
+                        None if ef_l is None else ef_l["down"])
+                for m in range(m_clients):             # compressed broadcasts
+                    log.send("server", f"client{m}", "broadcast", l,
+                             down_payload)
+                stale[l] = jnp.stack([down_hat - up_hats[m] / m_clients
+                                      for m in range(m_clients)])
+                for m in range(m_clients):
+                    h[m] = stale[l][m] + h_plus[m] / m_clients
+                if ef_l is not None:
+                    new_state[l] = {"up": jnp.stack(new_ef_up),
+                                    "down": ef_down}
         else:
             for m in range(m_clients):
                 h[m] = h_plus[m]
@@ -94,9 +144,13 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     for m in range(m_clients):
         pm = jax.tree.map(lambda v: v[m], params)
         logits.append(h[m] @ pm["cls"]["W"] + pm["cls"]["b"])
+    out = (jnp.stack(logits),)
     if return_stale:
-        return jnp.stack(logits), stale, log
-    return jnp.stack(logits), log
+        out = out + (stale,)
+    out = out + (log,)
+    if compressor is not None:
+        out = out + (new_state,)
+    return out
 
 
 def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
@@ -124,33 +178,42 @@ def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
             log.send("server", f"client{m}", "index_sync", j, payload)
 
 
-def log_agg_traffic(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
+def log_agg_traffic(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig,
+                    compressor: Compressor = None):
     """Replay JointInference's aggregation messages shape-only (no compute).
 
     Per aggregation layer, each client uploads its (n_{l+1}, h) block and the
     server broadcasts the aggregate back ((n_{l+1}, h) for mean,
     (n_{l+1}, M*h) for concat) — the exact message sequence of
     ``simulate_joint_inference``, enumerated from the batch's static shapes.
-    Together with ``log_index_sync`` this reconstructs one round's full
-    message log without running the model; the sharded backend audits its
-    collective byte meter against it (mean AND concat — the compute-level
-    simulation itself stays mean-only).
+    With a ``compressor`` the logged sizes are the codec's exact wire sizes
+    (``Compressor.wire_bytes``), matching the payloads the compute-level
+    simulation would ship. Together with ``log_index_sync`` this
+    reconstructs one round's full message log without running the model;
+    the sharded backend audits its collective byte meter against it (mean
+    AND concat — the compute-level simulation itself stays mean-only).
     """
     if not cfg.agg_layers:
         return
     for l in sorted(cfg.agg_layers):
         n = batch.gather_idx[l].shape[1]
-        up = np.broadcast_to(np.float32(0), (n, cfg.hidden))
         down_h = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
-        down = np.broadcast_to(np.float32(0), (n, down_h))
+        if compressor is None:
+            up_bytes = n * cfg.hidden * 4
+            down_bytes = n * down_h * 4
+        else:
+            up_bytes = compressor.wire_bytes(n, cfg.hidden)
+            down_bytes = compressor.wire_bytes(n, down_h)
         for m in range(cfg.n_clients):
-            log.send(f"client{m}", "server", "upload", l, up)
+            log.send_nbytes(f"client{m}", "server", "upload", l, up_bytes)
         for m in range(cfg.n_clients):
-            log.send("server", f"client{m}", "broadcast", l, down)
+            log.send_nbytes("server", f"client{m}", "broadcast", l,
+                            down_bytes)
 
 
 def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
-                   optimizer):
+                   optimizer, compressor: Compressor = None,
+                   comp_state=None):
     """One full GLASU round (Alg 1) over explicit messages.
 
     JointInference runs message-by-message (plus the index-sync traffic of
@@ -158,13 +221,20 @@ def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
     only the stale buffers each client already holds), so they reuse
     ``glasu.local_update_steps`` and emit no messages.
 
-    Returns (params, opt_state, losses, log).
+    Returns (params, opt_state, losses, log, comp_state) — the trailing
+    error-feedback carry is ``None`` unless a ``compressor`` threads one.
     """
     log = MessageLog()
     if cfg.agg_layers:
         log_index_sync(log, batch, cfg)
-        _, stale, _ = simulate_joint_inference(params, batch, cfg, log=log,
-                                               return_stale=True)
+        if compressor is None:
+            _, stale, _ = simulate_joint_inference(params, batch, cfg,
+                                                   log=log,
+                                                   return_stale=True)
+        else:
+            _, stale, _, comp_state = simulate_joint_inference(
+                params, batch, cfg, log=log, return_stale=True,
+                compressor=compressor, comp_state=comp_state)
     else:
         stale = {}
     g_hl = None
@@ -172,4 +242,4 @@ def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
         g_hl = glasu.label_owner_grad(params, batch, stale, cfg)
     params, opt_state, losses = glasu.local_update_steps(
         params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
-    return params, opt_state, losses, log
+    return params, opt_state, losses, log, comp_state

@@ -274,15 +274,25 @@ class GlasuSampler:
             labels=np.broadcast_to(np.int32(0), (self.cfg.batch_size,)),
             self_pos=sp)
 
-    def comm_bytes_per_joint_inference(self, hidden: int, agg: str = "mean") -> int:
+    def comm_bytes_per_joint_inference(self, hidden: int, agg: str = "mean",
+                                       compressor=None) -> int:
         """Paper cost model: per aggregation layer, every client uploads its
-        (n_{l+1}, h) block and receives the aggregate back; plus index sync."""
+        (n_{l+1}, h) block and receives the aggregate back; plus index sync.
+
+        With a ``compressor`` (``comm.compression.Compressor``) embedding
+        messages are priced at their exact wire size instead of 4 B/float;
+        the int32 index-sync traffic is codec-independent and unchanged.
+        """
         total = 0
         for l in self.cfg.agg_layers:
             n = self.layer_sizes[l + 1]
-            up = self.M * n * hidden * 4
             down_h = hidden * (self.M if agg == "concat" else 1)
-            down = self.M * n * down_h * 4
+            if compressor is None:
+                up = self.M * n * hidden * 4
+                down = self.M * n * down_h * 4
+            else:
+                up = self.M * compressor.wire_bytes(n, hidden)
+                down = self.M * compressor.wire_bytes(n, down_h)
             total += up + down
         for j in range(self.cfg.n_layers + 1):
             if self._shared(j):

@@ -249,3 +249,12 @@ def client_batch_specs(batch, mesh: Mesh, axis: str = "clients",
         feats=leaf(batch.feats), gather_idx=per(batch.gather_idx),
         gather_mask=per(batch.gather_mask), row_valid=per(batch.row_valid),
         labels=P(), self_pos=per(batch.self_pos))
+
+
+def client_comp_state_specs(comp_state, mesh: Mesh, axis: str = "clients"):
+    """Specs for the compressed-exchange error-feedback carry
+    (``core.glasu.init_comp_state``): the per-layer uplink accumulator is
+    client-stacked ``(M, n, h)`` (sharded over ``axis``, guarded like every
+    client rule), the downlink accumulator is server state (replicated)."""
+    return {l: {"up": client_leaf_spec(st["up"], mesh, axis), "down": P()}
+            for l, st in comp_state.items()}

@@ -31,6 +31,7 @@ import pytest
 
 from repro.api import (ExperimentConfig, ShardedBackend, SimulationBackend,
                        Trainer, VmappedBackend, make_backend)
+from repro.comm.compression import make_compressor
 from repro.core import glasu
 from repro.fed import simulation
 from repro.graph.prefetch import stack_rounds
@@ -363,6 +364,110 @@ def test_sharded_multi_round_shape_guard():
         jax.random.PRNGKey(0), jnp.arange(3))
     with pytest.raises(ValueError, match="rounds_per_step"):
         fn(params, opt.init(params), batches, keys)
+
+
+# ------------------------------------------------ compressed exchange rows
+# Quantization amplifies compilation-level ULP noise (a last-ULP input
+# difference can flip a round-to-nearest bucket and move the decoded value
+# by a whole quantization step), so compressed cross-backend rows are
+# pinned at a tolerance one class looser than SHARD_TOL — still far
+# tighter than any protocol bug (wrong index/reduction) would produce.
+COMP_TOL = dict(rtol=2e-4, atol=2e-4)
+
+COMP_GRID = [("int8", {}), ("fp8", {}), ("topk_ef", {"k": 2})]
+
+
+@pytest.mark.parametrize("method,kw", COMP_GRID)
+@pytest.mark.parametrize("k", [1, pytest.param(4, marks=pytest.mark.slow)])
+def test_compressed_sharded_conforms_to_vmapped(method, kw, k):
+    """Compressed rows of the backend grid: trained params, losses, and
+    byte meters agree between the vmapped engine and the sharded engine
+    (which encodes BEFORE its all_gather — the collective itself moves the
+    wire payload), with the EF carry threaded through both scans."""
+    cfg = _cfg("gcnii", "mean", compression=dict(method=method, **kw))
+    data, mcfg, sampler = _setup(cfg)
+    opt = cfg.make_optimizer()
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    rounds = _sample_rounds(sampler, ROUNDS)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(1), jnp.arange(ROUNDS))
+    comp = make_compressor(mcfg.compression)
+    analytic = sampler.comm_bytes_per_joint_inference(
+        mcfg.hidden, mcfg.agg, compressor=comp)
+    dense = sampler.comm_bytes_per_joint_inference(mcfg.hidden, mcfg.agg)
+    assert analytic < dense
+
+    vb = VmappedBackend()
+    vb.bind(mcfg, opt, sampler)
+    p_ref, losses_ref, comm_ref = _run(vb, opt, params, rounds, keys, k)
+    assert comm_ref == analytic
+
+    sb = make_backend("sharded")
+    sb.bind(mcfg, opt, sampler)      # bind-time audit vs the message log
+    p_sh, losses_sh, comm_sh = _run(sb, opt, params, rounds, keys, k)
+    assert comm_sh == comm_ref
+    np.testing.assert_allclose(losses_sh, losses_ref, **COMP_TOL)
+    _assert_trees_close(p_sh, p_ref, **COMP_TOL)
+
+
+def test_compressed_concat_sharded_conforms_to_vmapped():
+    """concat aggregation compresses the widened (n, M*h) broadcast too."""
+    cfg = _cfg("gcn", "concat", compression={"method": "int8"})
+    data, mcfg, sampler = _setup(cfg)
+    opt = cfg.make_optimizer()
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    rounds = _sample_rounds(sampler, 2)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(1), jnp.arange(2))
+    vb = VmappedBackend()
+    vb.bind(mcfg, opt, sampler)
+    p_ref, losses_ref, comm_ref = _run(vb, opt, params, rounds, keys, 1)
+    sb = make_backend("sharded")
+    sb.bind(mcfg, opt, sampler)
+    p_sh, losses_sh, comm_sh = _run(sb, opt, params, rounds, keys, 1)
+    assert comm_sh == comm_ref > 0
+    np.testing.assert_allclose(losses_sh, losses_ref, **COMP_TOL)
+    _assert_trees_close(p_sh, p_ref, **COMP_TOL)
+
+
+def test_compressed_collective_meter_agrees_with_message_log():
+    """Compressed sharded byte meter: the trace-recorded collectives carry
+    the WIRE sizes of the encoded payloads and still audit term-by-term
+    against the simulation backend's compressed message log."""
+    cfg = _cfg("gcnii", "mean", compression={"method": "topk_ef", "k": 2})
+    data, mcfg, sampler = _setup(cfg)
+    opt = cfg.make_optimizer()
+    sb = make_backend("sharded")
+    sb.bind(mcfg, opt, sampler)
+    assert len(sb.collectives) == len(mcfg.agg_layers)
+    dense_star = sum(r.n_clients * r.n_rows * (r.width_up + r.width_down)
+                     * r.itemsize for r in sb.collectives)
+    assert sum(r.star_bytes() for r in sb.collectives) < dense_star
+
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    batch = jax.tree.map(jnp.array, sampler.sample_round())
+    mb = SimulationBackend()
+    mb.bind(mcfg, opt, sampler)
+    out = mb.run_round(params, opt.init(params), batch,
+                       jax.random.PRNGKey(0))
+    log = out.message_log
+    assert sum(r.star_bytes() for r in sb.collectives) == \
+        log.total_bytes("upload") + log.total_bytes("broadcast")
+    assert sb.bytes_per_round == log.total_bytes()
+
+
+@pytest.mark.slow
+def test_compressed_trainer_sharded_matches_vmapped_run():
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    cfg = _cfg("gcnii", "mean", eval_every=2, optimizer="adam",
+               compression={"method": "int8", "error_feedback": True})
+    res_v = Trainer(cfg, data=data).run()
+    res_s = Trainer(cfg.with_(backend="sharded"), data=data).run()
+    assert res_s.comm_bytes == res_v.comm_bytes > 0
+    np.testing.assert_allclose(
+        [h["loss"] for h in res_s.history],
+        [h["loss"] for h in res_v.history], **COMP_TOL)
+    _assert_trees_close(res_s.params, res_v.params, **COMP_TOL)
 
 
 # ----------------------------------------------------------- trainer E2E

@@ -1,0 +1,128 @@
+"""Docs link/anchor checker + README quickstart doctest.
+
+Validates, over ``docs/*.md`` and ``README.md``:
+
+  * **markdown links** ``[text](target)`` with a relative target: the file
+    exists (URL targets are skipped, fragments stripped);
+  * **path references**: any backticked token that looks like a repo path
+    (``benchmarks/run.py``, ``docs/BACKENDS.md``) resolves — either as
+    given from the repo root or under ``src/repro/`` (the short anchor
+    style the docs use for ``core/glasu.py``-like references);
+  * **line anchors** `` `path:NNN` ``: the file exists AND has at least
+    NNN lines; when the anchor is followed by a parenthesized
+    `` (`symbol`) ``, the symbol must appear within ±10 lines of NNN —
+    so the paper-to-code map in ``docs/ARCHITECTURE.md`` fails CI when
+    code moves instead of silently pointing at the wrong function.
+
+With ``--run-quickstart`` it also executes the first ``python`` fence of
+the README's Quickstart section (needs ``PYTHONPATH=src``) — the CI docs
+job runs it so the advertised five-liner stays green.
+
+Run: ``PYTHONPATH=src python tools/check_docs.py [--run-quickstart]``
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# backticked repo-path-looking tokens (optionally with a :line anchor)
+_PATH_RE = re.compile(
+    r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+\."
+    r"(?:py|md|json|yml|yaml|ini|txt))(?::(\d+))?`")
+# the anchor's optional trailing symbol: `path:123` (`symbol`)
+_SYMBOL_RE = re.compile(r"^\s*\(`([A-Za-z_][A-Za-z0-9_.]*)`\)")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SYMBOL_WINDOW = 10
+
+
+def _resolve(path: str) -> Path | None:
+    for cand in (REPO / path, REPO / "src" / "repro" / path):
+        if cand.is_file():
+            return cand
+    return None
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    rel = md.relative_to(REPO)
+
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        plain = target.split("#")[0]
+        if plain and _resolve(plain) is None \
+                and not (md.parent / plain).is_file():
+            errors.append(f"{rel}: broken link -> {target}")
+
+    for m in _PATH_RE.finditer(text):
+        path, line_no = m.group(1), m.group(2)
+        f = _resolve(path)
+        if f is None:
+            errors.append(f"{rel}: missing file -> {path}")
+            continue
+        if line_no is None:
+            continue
+        lines = f.read_text().splitlines()
+        n = int(line_no)
+        if n < 1 or n > len(lines):
+            errors.append(f"{rel}: anchor {path}:{n} beyond end of file "
+                          f"({len(lines)} lines)")
+            continue
+        sym = _SYMBOL_RE.match(text[m.end():])
+        if sym:
+            name = sym.group(1)
+            lo, hi = max(0, n - 1 - _SYMBOL_WINDOW), n + _SYMBOL_WINDOW
+            window = "\n".join(lines[lo:hi])
+            if name not in window:
+                errors.append(
+                    f"{rel}: anchor {path}:{n} expects `{name}` within "
+                    f"+/-{_SYMBOL_WINDOW} lines, not found (code moved? "
+                    f"update the anchor)")
+    return errors
+
+
+def run_quickstart(readme: Path) -> list[str]:
+    text = readme.read_text()
+    m = re.search(r"## Quickstart.*?```python\n(.*?)```", text, re.S)
+    if not m:
+        return [f"{readme.name}: no python fence under '## Quickstart'"]
+    snippet = m.group(1)
+    print(f"-- executing README quickstart ({len(snippet.splitlines())} "
+          f"lines) --")
+    try:
+        exec(compile(snippet, "<README quickstart>", "exec"), {})
+    except Exception as e:          # noqa: BLE001 — report, don't crash
+        return [f"README quickstart failed: {type(e).__name__}: {e}"]
+    return []
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute the README quickstart snippet "
+                         "(needs PYTHONPATH=src)")
+    args = ap.parse_args()
+
+    files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    errors = []
+    for md in files:
+        found = check_file(md)
+        errors.extend(found)
+        print(f"{md.relative_to(REPO)}: "
+              f"{'OK' if not found else f'{len(found)} problem(s)'}")
+    if args.run_quickstart:
+        errors.extend(run_quickstart(REPO / "README.md"))
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
