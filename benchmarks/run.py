@@ -38,6 +38,10 @@ def main() -> None:
     print("# comm compression (bytes/round vs accuracy, meters audited)")
     comm_compression.run(smoke=not args.full)
 
+    from . import serve_bench
+    print("# serving (cold/warm/compressed query mixes, bytes audited)")
+    serve_bench.run(smoke=not args.full)
+
     from . import (accuracy_parity, backbones, client_scaling, comm_model,
                    lazy_aggregation, stale_updates)
     from .common import BenchSettings

@@ -4,6 +4,7 @@
     result = Trainer(get_preset("cora-gcnii-glasu").with_(rounds=60)).run()
 """
 from ..comm.compression import CompressionConfig
+from ..serve.config import ServeConfig
 from .backends import (Backend, RoundResult, ShardedBackend,
                        SimulationBackend, StepResult, VmappedBackend,
                        make_backend)
@@ -15,7 +16,8 @@ from .trainer import (CheckpointHook, CommMeterHook, EarlyStopHook, EvalHook,
 __all__ = [
     "Backend", "RoundResult", "StepResult", "ShardedBackend",
     "SimulationBackend", "VmappedBackend", "make_backend",
-    "CompressionConfig", "ExperimentConfig", "agg_layers_for_k",
+    "CompressionConfig", "ServeConfig", "ExperimentConfig",
+    "agg_layers_for_k",
     "get_preset", "list_presets", "register_preset", "CheckpointHook",
     "CommMeterHook", "EarlyStopHook", "EvalHook", "Hook", "Trainer",
     "TrainerState", "step_schedule",

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 
 from ..comm.compression import CompressionConfig
 from ..core.glasu import GlasuConfig
+from ..serve.config import ServeConfig
 from ..core.train import TrainConfig
 from ..graph.sampler import SamplerConfig
 from ..optim import optimizers as opt_lib
@@ -74,6 +75,12 @@ class ExperimentConfig:
     # coerced to a validated CompressionConfig; resume-mutable — EF
     # accumulators reset when the codec changes across a resume.
     compression: Optional[CompressionConfig] = None
+    # -------------------------------------------------------------- serving
+    # knobs for the repro.serve joint-inference path (cache size, staleness
+    # bound, micro-batcher window). None = library defaults; a plain dict
+    # is coerced to a validated ServeConfig. Resume-mutable: serving knobs
+    # never affect training state.
+    serve: Optional[ServeConfig] = None
     # -------------------------------------------------------------- sampler
     batch_size: int = 16
     fanout: int = 3
@@ -132,6 +139,15 @@ class ExperimentConfig:
                   or isinstance(self.compression, CompressionConfig)):
             err(f"compression must be a CompressionConfig or dict, got "
                 f"{type(self.compression).__name__}")
+        if isinstance(self.serve, dict):
+            try:
+                object.__setattr__(self, "serve",
+                                   ServeConfig(**self.serve))
+            except (TypeError, ValueError) as e:
+                err(f"invalid serve block: {e}")
+        elif not (self.serve is None or isinstance(self.serve, ServeConfig)):
+            err(f"serve must be a ServeConfig or dict, got "
+                f"{type(self.serve).__name__}")
         if self.compression is not None and self.compression.active \
                 and self.secure_agg:
             err("secure_agg masks cancel only exactly; compressed uploads "

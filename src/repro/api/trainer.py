@@ -191,7 +191,7 @@ class CheckpointHook(Hook):
     RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
                       "target_acc", "ckpt_every", "ckpt_dir",
                       "rounds_per_step", "prefetch_buffers", "mesh_devices",
-                      "compression")
+                      "compression", "serve")
 
     def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
         self.ckpt_dir = ckpt_dir

@@ -9,8 +9,9 @@ from __future__ import annotations
 import json
 import os
 import re
+import zipfile
 from pathlib import Path
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import numpy as np
@@ -76,6 +77,115 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
         else:
             restored.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+class InferenceRestore(NamedTuple):
+    """``load_for_inference`` result: exactly what a serving process needs."""
+    params: Any            # the trained per-client parameter stack
+    config: Any            # ExperimentConfig that wrote the checkpoint
+    step: int              # training round the params were saved at
+    data: Any              # VFLDataset the config binds to (feature stores)
+
+
+def load_for_inference(ckpt_dir: str, step: Optional[int] = None,
+                       data=None) -> InferenceRestore:
+    """Restore PARAMS ONLY from a training checkpoint, for serving.
+
+    A training checkpoint stores ``{"params", "opt_state"}`` as one flat
+    leaf list; serving needs none of the optimizer state (nor the
+    ``comp_<step>.npz`` error-feedback sidecars — compression state is a
+    training-time carry). This loader reconstructs the tree structure from
+    the ``experiment.json`` the CheckpointHook writes alongside, then pulls
+    ONLY the params leaves out of the npz (members decompress lazily, so
+    opt-state bytes are never read).
+
+    Errors are loud by design — a serving process must not come up on a
+    half-readable checkpoint:
+
+      * no ``experiment.json``     -> FileNotFoundError (can't rebuild the
+        model structure the leaves belong to)
+      * no ``LATEST`` / bad step   -> FileNotFoundError listing what exists
+      * corrupt npz / leaf-count or dtype mismatch -> RuntimeError
+
+    ``data`` short-circuits the dataset rebuild when the caller already
+    holds the VFLDataset (tests, benchmarks); it must match the config's
+    dataset binding.
+    """
+    import jax.numpy as jnp
+
+    path = Path(ckpt_dir)
+    meta_file = path / "experiment.json"
+    if not meta_file.exists():
+        raise FileNotFoundError(
+            f"no experiment.json in {ckpt_dir}: cannot reconstruct the "
+            "model structure this checkpoint's leaves belong to (the "
+            "CheckpointHook writes it next to every save)")
+    from ..api.config import ExperimentConfig   # local: core must not
+    cfg = ExperimentConfig.from_dict(            # import api at module level
+        json.loads(meta_file.read_text()))
+
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(
+            f"no LATEST pointer in {ckpt_dir} and no explicit step given; "
+            f"found: {sorted(f.name for f in path.glob('ckpt_*.npz'))}")
+    fn = path / f"ckpt_{step:08d}.npz"
+    if not fn.exists():
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} in {ckpt_dir}; found: "
+            f"{sorted(f.name for f in path.glob('ckpt_*.npz'))}")
+
+    if data is None:
+        from ..graph.synth import make_vfl_dataset
+        data = make_vfl_dataset(cfg.dataset, n_clients=cfg.n_clients,
+                                seed=cfg.seed)
+        if cfg.method == "centralized":
+            from .train import make_centralized_dataset
+            data = make_centralized_dataset(data)
+    from . import glasu
+    mcfg = cfg.glasu_config(data)
+    params_abs = jax.eval_shape(
+        lambda k: glasu.init_params(k, mcfg), jax.random.PRNGKey(0))
+    opt_abs = jax.eval_shape(cfg.make_optimizer().init, params_abs)
+    # mark each flat leaf slot as params/not-params in the SAME dict-key
+    # flatten order the CheckpointHook saved ({"params", "opt_state"})
+    marks = jax.tree_util.tree_leaves(
+        {"params": jax.tree.map(lambda _: True, params_abs),
+         "opt_state": jax.tree.map(lambda _: False, opt_abs)})
+
+    try:
+        blob = np.load(fn)
+        meta = json.loads(bytes(blob["__meta__"]).decode())
+    except (zipfile.BadZipFile, OSError, ValueError, KeyError,
+            json.JSONDecodeError) as e:
+        raise RuntimeError(
+            f"corrupt checkpoint {fn}: {type(e).__name__}: {e}") from e
+    if meta["n"] != len(marks):
+        raise RuntimeError(
+            f"corrupt/mismatched checkpoint {fn}: stores {meta['n']} "
+            f"leaves, the config's params+opt_state tree has {len(marks)} "
+            "(different optimizer or model than experiment.json claims?)")
+    p_leaves = []
+    for i, (is_param, dt) in enumerate(zip(marks, meta["dtypes"])):
+        if not is_param:
+            continue                     # opt_state member: never loaded
+        try:
+            arr = blob[f"leaf_{i}"]
+        except (zipfile.BadZipFile, KeyError, OSError, ValueError) as e:
+            raise RuntimeError(
+                f"corrupt checkpoint {fn}: leaf_{i} unreadable: "
+                f"{type(e).__name__}: {e}") from e
+        p_leaves.append(jnp.asarray(arr).view(jnp.bfloat16)
+                        if dt == "bfloat16" else jnp.asarray(arr))
+    params = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params_abs), p_leaves)
+    for leaf, like in zip(p_leaves, jax.tree_util.tree_leaves(params_abs)):
+        if leaf.shape != like.shape:
+            raise RuntimeError(
+                f"corrupt/mismatched checkpoint {fn}: params leaf shape "
+                f"{leaf.shape} != expected {like.shape}")
+    return InferenceRestore(params=params, config=cfg, step=int(step),
+                            data=data)
 
 
 def cleanup(ckpt_dir: str, keep: int = 3):

@@ -935,7 +935,7 @@ def make_sharded_joint_fn(cfg: GlasuConfig, mesh, axis: str = "clients"):
 
 # ---------------------------------------------------------------- evaluation
 def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
-                 chunk: int = 4096):
+                 chunk: int = 4096, collect_agg: bool = False):
     """Exact full-graph inference, chunked over nodes (eval only).
 
     feats: (M, N, d); nbr_idx/mask: (M, N, D+1) padded neighbor tables.
@@ -949,6 +949,13 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
     which also makes the chunk tiling exact when chunk does not divide N —
     the previous clamped-dynamic-slice concatenation silently re-read
     earlier rows in that case.
+
+    ``collect_agg=True`` additionally returns the post-aggregation stacks
+    ``{l: (M, N, h_agg)}`` per aggregation layer — the serving cache's
+    warm-fill source. Pad rows are sliced off BEFORE ``_aggregate`` runs
+    (``[:, :n]`` above), so the collected stacks carry exactly the N real
+    nodes regardless of whether ``chunk`` divides N; the hot-node cache
+    can never be poisoned by chunk padding.
     """
     m, n = feats.shape[0], feats.shape[1]
     pad = (-n) % chunk
@@ -958,6 +965,7 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
     n_pad = n + pad
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
     h0 = h
+    aggs: Dict[int, Any] = {}
     for l in range(cfg.n_layers):
         layer = _client_layer(cfg, l)
 
@@ -976,11 +984,134 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
                 m, n_pad, pieces.shape[-1])[:, :n]
         if l in cfg.agg_layers:
             h, _ = _aggregate(cfg, h_plus)
+            if collect_agg:
+                aggs[l] = h
         else:
             h = h_plus
         # h0 is node-aligned in full-graph mode (no subsetting)
     logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    if collect_agg:
+        return logits, aggs
     return logits  # (M, N, C)
+
+
+# ------------------------------------------------------------------- serving
+# Query-path forward for the serving subsystem (repro.serve). Differences
+# from joint_inference: no PRNG key (the §3.6 privacy hooks are a training
+# protocol — serving answers on the trained model), no error-feedback carry
+# (queries are stateless; EF is a training-time variance-reduction loop),
+# and a cache-injection hook at every aggregation layer: the session
+# overwrites rows whose (node, layer, params_version) aggregate it already
+# holds, so those rows skip the cross-client exchange — the serving-path
+# analogue of §3.5 stale updates. Injection happens AFTER _aggregate /
+# _compressed_aggregate; both aggregations are row-independent (mean /
+# concat over clients per node), so garbage in a cached row's freshly
+# computed value (its neighbor deps are pruned from the query plan) cannot
+# contaminate any other row before it is overwritten.
+
+def serve_forward(params, batch: SampledBatch, cfg: GlasuConfig,
+                  compressor: Optional[Compressor] = None,
+                  cache_inject: Optional[Dict[int, Any]] = None):
+    """Cross-client forward for one served query plan (vmapped clients).
+
+    ``cache_inject`` maps aggregation layer l to ``(keep, rows)``: ``keep``
+    is a float (n_{l+1},) mask (1 = use the cached aggregate) and ``rows``
+    the (M, n_{l+1}, h_agg) cached per-client stacks. The dict must carry
+    the SAME key set on every call of one jitted trace (the session always
+    passes all aggregation layers; all-zero masks mean no injection).
+
+    Returns ``(h, aggs)``: the final (M, n_L, h_agg) representation the
+    classifier consumes, and the post-injection aggregate stacks
+    ``{l: (M, n_{l+1}, h_agg)}`` the session reads its cache fills from.
+    """
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"],
+                                                   batch.feats)
+    h0 = h
+    aggs: Dict[int, Any] = {}
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l in cfg.agg_layers:
+            if compressor is None:
+                h, _ = _aggregate(cfg, h_plus)
+            else:
+                h, _, _ = _compressed_aggregate(cfg, compressor, h_plus,
+                                                None, layer=l)
+            if cache_inject is not None and l in cache_inject:
+                keep, rows = cache_inject[l]
+                h = jnp.where(keep[None, :, None] > 0, rows, h)
+            aggs[l] = h
+        else:
+            h = h_plus
+    return h, aggs
+
+
+def sharded_serve_forward(params, batch: SampledBatch, cfg: GlasuConfig, *,
+                          axis_name: str, m_loc: int,
+                          compressor: Optional[Compressor] = None,
+                          cache_inject: Optional[Dict[int, Any]] = None):
+    """``serve_forward`` under shard_map: local client blocks, collective
+    Agg (same layout contract as ``sharded_joint_inference``). The
+    injection masks/rows arrive replicated; each device overwrites its
+    local block of the aggregate."""
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"],
+                                                   batch.feats)
+    h0 = h
+    aggs: Dict[int, Any] = {}
+    i0 = jax.lax.axis_index(axis_name) * m_loc
+    for l in range(cfg.n_layers):
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l in cfg.agg_layers:
+            if compressor is None:
+                uploads = _gather_clients(h_plus, axis_name)
+                h_full, _ = _aggregate(cfg, uploads)
+                h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
+            else:
+                h, _, _ = _compressed_aggregate(
+                    cfg, compressor, h_plus, None,
+                    gather=lambda x: _gather_clients(x, axis_name),
+                    i0=i0, layer=l)
+            if cache_inject is not None and l in cache_inject:
+                keep, rows = cache_inject[l]
+                rows_blk = jax.lax.dynamic_slice_in_dim(rows, i0, m_loc,
+                                                        axis=0)
+                h = jnp.where(keep[None, :, None] > 0, rows_blk, h)
+            aggs[l] = h
+        else:
+            h = h_plus
+    return h, aggs
+
+
+def make_sharded_serve_fn(cfg: GlasuConfig, mesh, axis: str = "clients",
+                          compressor: Optional[Compressor] = None):
+    """Jitted serving dispatch with clients sharded over the mesh.
+
+    ``(params, batch, inject) -> (h, aggs)`` with the client axis of every
+    output reassembled to the global (M, ...) stack; ``inject`` is the
+    replicated ``{l: (keep, rows)}`` cache-injection dict (every
+    aggregation layer present)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    m_loc = _client_axis_check(cfg, mesh, axis)
+    # specs don't depend on the optimizer; borrow sgd for the helper
+    pspecs, _, bspecs = _sharded_specs(cfg, opt_lib.sgd(0.0), axis)
+    ispecs = {l: (P(), P()) for l in cfg.agg_layers}
+
+    def body(params, batch, inject):
+        return sharded_serve_forward(params, batch, cfg, axis_name=axis,
+                                     m_loc=m_loc, compressor=compressor,
+                                     cache_inject=inject)
+
+    out_specs = (P(axis), {l: P(axis) for l in cfg.agg_layers})
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(pspecs, bspecs, ispecs),
+                             out_specs=out_specs, check_rep=False))
 
 
 def accuracy_from_logits(logits, labels, idx, mode: str = "ensemble"):

@@ -211,6 +211,41 @@ def log_agg_traffic(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig,
                             down_bytes)
 
 
+def log_query_traffic(log: MessageLog, fresh_counts, cfg: GlasuConfig,
+                      compressor: Compressor = None):
+    """Replay one SERVED query's messages shape-only (no compute).
+
+    ``fresh_counts`` maps aggregation layer -> number of rows the serving
+    session had to exchange fresh (cache misses among the needed rows);
+    cached rows ship nothing. Per layer with n fresh rows, each client
+    uploads its (n, h) block and receives the aggregate back — priced at
+    the codec's exact wire size, identical to ``log_agg_traffic`` — plus
+    one server->client ``index_sync`` leg carrying the int32 fresh-row id
+    list (training syncs index unions both ways per shared level; a query
+    only tells clients which rows to recompute). The serve benchmark
+    audits ``InferenceSession``'s per-answer byte counters against this
+    replay term-by-term.
+    """
+    for l in sorted(cfg.agg_layers):
+        n = int(fresh_counts.get(l, 0))
+        if n == 0:
+            continue
+        down_h = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
+        if compressor is None:
+            up_bytes = n * cfg.hidden * 4
+            down_bytes = n * down_h * 4
+        else:
+            up_bytes = compressor.wire_bytes(n, cfg.hidden)
+            down_bytes = compressor.wire_bytes(n, down_h)
+        for m in range(cfg.n_clients):
+            log.send_nbytes("server", f"client{m}", "index_sync", l, n * 4)
+        for m in range(cfg.n_clients):
+            log.send_nbytes(f"client{m}", "server", "upload", l, up_bytes)
+        for m in range(cfg.n_clients):
+            log.send_nbytes("server", f"client{m}", "broadcast", l,
+                            down_bytes)
+
+
 def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
                    optimizer, compressor: Compressor = None,
                    comp_state=None):

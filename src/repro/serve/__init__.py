@@ -1,0 +1,16 @@
+"""Joint-inference serving subsystem (see ``docs/SERVING.md``).
+
+Restores trained params from a checkpoint and answers node-classification
+queries through the split-model forward, with a hot-node aggregate cache
+(the serving analogue of the paper's §3.5 stale updates), optional wire
+codecs on the embedding exchange, audited per-query byte metering, and a
+deadline micro-batcher in front of bucketed jit dispatches.
+"""
+from .batcher import MicroBatcher
+from .cache import HotNodeCache
+from .config import ServeConfig
+from .metrics import ServeAnswer, ServeMetrics
+from .session import InferenceSession
+
+__all__ = ["InferenceSession", "HotNodeCache", "MicroBatcher",
+           "ServeAnswer", "ServeConfig", "ServeMetrics"]

@@ -496,3 +496,104 @@ def test_trainer_sharded_multi_round_step():
     res = Trainer(cfg, data=data).run()
     assert res.rounds_run == ROUNDS
     assert np.isfinite(res.history[-1]["loss"])
+
+
+# --------------------------------------------------------------- serving
+# Served answers must agree with the direct full_forward evaluator at the
+# query rows, across engines and codecs, and with/without the hot-node
+# cache in the path. int8 quantization of the embedding exchange moves
+# logits by ~1e-2 on these shapes (a codec property, not an engine
+# divergence), so compressed-vs-EXACT rows get their own tolerance class;
+# compressed engine-vs-engine stays at COMP_TOL.
+SERVE_CODEC_TOL = dict(rtol=5e-2, atol=5e-2)
+
+
+@pytest.fixture(scope="module")
+def serve_ckpt(tmp_path_factory):
+    from repro.serve import InferenceSession, ServeConfig  # noqa: F401
+    d = tmp_path_factory.mktemp("serve-conf")
+    cfg = _cfg("gcnii", "mean", optimizer="adam",
+               ckpt_dir=str(d), ckpt_every=0)
+    data = make_vfl_dataset(cfg.dataset, n_clients=cfg.n_clients,
+                            seed=cfg.seed)
+    Trainer(cfg, data=data).run()
+    from repro.core.train import _eval_tables
+    feats, nbr_idx, nbr_mask = _eval_tables(data, cfg.eval_table_cap,
+                                            cfg.seed)
+    from repro.core import checkpoint
+    r = checkpoint.load_for_inference(str(d), data=data)
+    full = np.asarray(glasu.full_forward(r.params, cfg.glasu_config(data),
+                                         feats, nbr_idx, nbr_mask))
+    return str(d), data, full
+
+
+SERVE_ENGINES = ["vmapped",
+                 pytest.param("sharded", marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("engine", SERVE_ENGINES)
+def test_served_answers_conform_to_full_forward(serve_ckpt, engine):
+    from repro.serve import InferenceSession, ServeConfig
+    d, data, full = serve_ckpt
+    q = np.array([3, 7, 50, 200])
+    s = InferenceSession.from_checkpoint(
+        d, data=data, serve=ServeConfig(max_batch=8, engine=engine))
+    cold = s.answer(q)                       # uncached: fresh exchange
+    assert cold.cold and cold.wire_bytes > 0
+    np.testing.assert_allclose(cold.per_client, full[:, q], **COMP_TOL)
+    np.testing.assert_allclose(cold.logits, full.mean(0)[q], **COMP_TOL)
+    cached = s.answer(q)                     # cached: no exchange at all
+    assert not cached.cold and cached.wire_bytes == 0
+    np.testing.assert_allclose(cached.logits, full.mean(0)[q], **COMP_TOL)
+    # partial overlap exercises cache injection mid-plan
+    q2 = np.array([7, 50, 99, 123])
+    mixed = s.answer(q2)
+    np.testing.assert_allclose(mixed.logits, full.mean(0)[q2], **COMP_TOL)
+
+
+@pytest.mark.parametrize("engine", SERVE_ENGINES)
+def test_served_compressed_answers_conform(serve_ckpt, engine):
+    from repro.serve import InferenceSession, ServeConfig
+    d, data, full = serve_ckpt
+    q = np.array([3, 7, 50, 200])
+    s = InferenceSession.from_checkpoint(
+        d, data=data, serve=ServeConfig(max_batch=8, engine=engine),
+        compression={"method": "int8"})
+    ans = s.answer(q)
+    np.testing.assert_allclose(ans.logits, full.mean(0)[q],
+                               **SERVE_CODEC_TOL)
+    assert (ans.preds == np.argmax(full.mean(0)[q], -1)).all()
+    dense = InferenceSession.from_checkpoint(
+        d, data=data, serve=ServeConfig(max_batch=8, engine=engine))
+    dense_ans = dense.answer(q)
+    assert dict(ans.fresh_rows) == dict(dense_ans.fresh_rows)
+    assert ans.wire_bytes < dense_ans.wire_bytes / 2   # codec actually paid
+
+
+@pytest.mark.slow
+def test_served_compressed_engines_agree(serve_ckpt):
+    from repro.serve import InferenceSession, ServeConfig
+    d, data, _ = serve_ckpt
+    q = np.array([3, 7, 50, 200])
+    outs = {}
+    for engine in ("vmapped", "sharded"):
+        s = InferenceSession.from_checkpoint(
+            d, data=data, serve=ServeConfig(max_batch=8, engine=engine),
+            compression={"method": "int8"})
+        outs[engine] = s.answer(q)
+    np.testing.assert_allclose(outs["sharded"].per_client,
+                               outs["vmapped"].per_client, **COMP_TOL)
+
+
+@pytest.mark.parametrize("engine", SERVE_ENGINES)
+def test_served_repeat_query_bitwise(serve_ckpt, engine):
+    from repro.serve import InferenceSession, ServeConfig
+    d, data, _ = serve_ckpt
+    q = np.array([5, 6, 7])
+    s = InferenceSession.from_checkpoint(
+        d, data=data, serve=ServeConfig(max_batch=8, engine=engine))
+    first, second, third = s.answer(q), s.answer(q), s.answer(q)
+    # cold -> warm and warm -> warm: bitwise at fixed params_version
+    np.testing.assert_array_equal(first.logits, second.logits)
+    np.testing.assert_array_equal(second.logits, third.logits)
+    np.testing.assert_array_equal(first.per_client, second.per_client)

@@ -1,0 +1,258 @@
+"""Serving subsystem: checkpoint restore, cache, batcher, byte metering.
+
+Conformance of served answers against the training-path evaluators across
+engines/codecs lives in ``test_backend_conformance.py``; this module covers
+the serving-specific machinery — params-only checkpoint restore
+(``load_for_inference``), hot-node cache semantics (LRU, staleness,
+version bumps), the query-path byte bill vs its message-log replay, the
+micro-batcher, and the chunk-padding guarantee of ``full_forward``'s
+aggregate collection (pad rows must never reach the cache or the served
+logits when ``chunk`` does not divide N).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExperimentConfig, Trainer
+from repro.core import checkpoint, glasu
+from repro.core.train import _eval_tables
+from repro.fed.simulation import MessageLog, log_query_traffic
+from repro.serve import (HotNodeCache, InferenceSession, MicroBatcher,
+                         ServeAnswer, ServeConfig)
+
+ROUNDS = 4
+
+
+def _cfg(**kw):
+    kw.setdefault("optimizer", "sgd")
+    kw.setdefault("eval_every", ROUNDS)
+    return ExperimentConfig(
+        name="serve-test", dataset="tiny", backbone="gcnii", hidden=16,
+        batch_size=8, size_cap=96, rounds=ROUNDS, lr=0.05, **kw)
+
+
+@pytest.fixture(scope="module")
+def ckpt(tmp_path_factory):
+    """A mid-training checkpoint: ckpt_every=2 leaves steps 2 and 4."""
+    d = tmp_path_factory.mktemp("serve-ckpt")
+    cfg = _cfg(ckpt_dir=str(d), ckpt_every=2)
+    res = Trainer(cfg).run()
+    return str(d), cfg, res
+
+
+# ------------------------------------------------------- load_for_inference
+def test_load_for_inference_params_only(ckpt):
+    d, cfg, res = ckpt
+    r = checkpoint.load_for_inference(d)
+    assert r.step == ROUNDS
+    # exactly the params tree — no opt_state leaves tag along
+    assert jax.tree_util.tree_structure(r.params) \
+        == jax.tree_util.tree_structure(res.params)
+    for a, b in zip(jax.tree.leaves(r.params), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert r.config.to_dict() == cfg.to_dict()
+
+
+def test_load_for_inference_mid_training_step_into_session(ckpt):
+    d, _, res = ckpt
+    r = checkpoint.load_for_inference(d, step=2)   # not the final params
+    assert r.step == 2
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(r.params),
+                               jax.tree.leaves(res.params)))
+    s = InferenceSession.from_checkpoint(d, step=2,
+                                         serve=ServeConfig(max_batch=8))
+    assert s.params_version == 2
+    ans = s.answer([1, 2, 3])
+    assert ans.logits.shape == (3, s.mcfg.n_classes)
+    assert np.isfinite(ans.logits).all()
+
+
+def test_load_for_inference_loud_errors(ckpt, tmp_path):
+    d, _, _ = ckpt
+    with pytest.raises(FileNotFoundError, match="experiment.json"):
+        checkpoint.load_for_inference(str(tmp_path))
+    with pytest.raises(FileNotFoundError, match="no checkpoint for step"):
+        checkpoint.load_for_inference(d, step=77)
+    # corrupt npz: truncate a copy of the checkpoint directory
+    import shutil
+    bad = tmp_path / "bad"
+    shutil.copytree(d, bad)
+    fn = bad / f"ckpt_{ROUNDS:08d}.npz"
+    fn.write_bytes(fn.read_bytes()[:100])
+    with pytest.raises(RuntimeError, match="corrupt"):
+        checkpoint.load_for_inference(str(bad))
+
+
+def test_load_for_inference_rejects_mismatched_model(ckpt, tmp_path):
+    d, cfg, _ = ckpt
+    import shutil
+    bad = tmp_path / "swapped"
+    shutil.copytree(d, bad)
+    # claim a different optimizer: the leaf count no longer matches
+    meta = json.loads((bad / "experiment.json").read_text())
+    meta["optimizer"] = "adam"
+    (bad / "experiment.json").write_text(json.dumps(meta))
+    with pytest.raises(RuntimeError, match="leaves"):
+        checkpoint.load_for_inference(str(bad))
+
+
+# ------------------------------------------------------------ HotNodeCache
+def test_cache_lru_eviction_order():
+    c = HotNodeCache(capacity=2)
+    row = np.ones((1, 3, 4), np.float32)
+    c.insert(0, np.array([10]), 0, row)
+    c.insert(0, np.array([11]), 0, row)
+    c.lookup(0, np.array([10]), 0, (3, 4))       # refresh 10 -> 11 is LRU
+    c.insert(0, np.array([12]), 0, row)          # evicts 11
+    hit, _ = c.lookup(0, np.array([10, 11, 12]), 0, (3, 4))
+    assert hit.tolist() == [1.0, 0.0, 1.0]
+    assert c.evictions == 1
+
+
+def test_cache_staleness_bound_and_version_bump():
+    c = HotNodeCache(capacity=8, max_staleness=1)
+    row = np.full((1, 2, 2), 7.0, np.float32)
+    c.insert(1, np.array([5]), 10, row)
+    hit, rows = c.lookup(1, np.array([5]), 11, (2, 2))   # 1 version old: ok
+    assert hit[0] == 1.0 and rows[0, 0, 0] == 7.0
+    hit, _ = c.lookup(1, np.array([5]), 12, (2, 2))      # 2 old: evicted
+    assert hit[0] == 0.0 and len(c) == 0
+    # exact-version cache: any bump invalidates
+    c0 = HotNodeCache(capacity=8, max_staleness=0)
+    c0.insert(1, np.array([5]), 10, row)
+    assert c0.lookup(1, np.array([5]), 11, (2, 2))[0][0] == 0.0
+
+
+def test_cache_disabled_and_padding_ids():
+    c = HotNodeCache(capacity=0)
+    c.insert(0, np.array([1]), 0, np.ones((1, 2, 2), np.float32))
+    hit, _ = c.lookup(0, np.array([1, -1]), 0, (2, 2))
+    assert hit.sum() == 0 and len(c) == 0
+    assert c.misses == 1          # the pad id (-1) is not counted
+
+
+def test_session_update_params_invalidates_cache(ckpt):
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(d, serve=ServeConfig(max_batch=8))
+    q = [1, 2, 3]
+    s.answer(q)
+    assert not s.answer(q).cold                   # warm at fixed version
+    s.update_params(s.params)                     # version bump, stale=0
+    a = s.answer(q)
+    assert a.cold and a.params_version == s.params_version
+
+
+# ------------------------------------------------- byte metering / answers
+def test_query_bytes_match_message_log_replay(ckpt):
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(
+        d, serve=ServeConfig(max_batch=8, record_log=True))
+    a1 = s.answer([0, 1, 2, 3])
+    a2 = s.answer([2, 3, 4, 5])                   # overlap: fewer fresh rows
+    for a in (a1, a2):
+        log = MessageLog()
+        log_query_traffic(log, a.fresh_rows, s.mcfg, compressor=s._comp)
+        assert a.upload_bytes == log.total_bytes("upload") \
+            == a.log.total_bytes("upload")
+        assert a.broadcast_bytes == log.total_bytes("broadcast")
+        assert a.index_bytes == log.total_bytes("index_sync")
+    top = s.L - 1
+    assert a2.fresh_rows[top] < a1.fresh_rows[top]
+    assert a2.wire_bytes < a1.wire_bytes
+    # warm repeat ships nothing and is bitwise stable
+    a3 = s.answer([2, 3, 4, 5])
+    assert a3.wire_bytes == 0 and not a3.cold
+    np.testing.assert_array_equal(a3.logits, a2.logits)
+
+
+def test_answer_validates_and_splits(ckpt):
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(d, serve=ServeConfig(max_batch=4))
+    with pytest.raises(ValueError, match="empty"):
+        s.answer([])
+    with pytest.raises(ValueError, match="query ids"):
+        s.answer([10_000])
+    big = list(range(10))                          # > max_batch: split
+    a = s.answer(big)
+    assert a.logits.shape[0] == 10
+    assert s.metrics.answers == 3 and s.metrics.queries == 10
+    # duplicate + shuffled queries map back to caller order
+    a2 = s.answer([3, 3, 1])
+    np.testing.assert_array_equal(a2.logits[0], a2.logits[1])
+    np.testing.assert_array_equal(a2.logits[2],
+                                  s.answer([1]).logits[0])
+
+
+def test_serve_config_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="engine"):
+        ServeConfig(engine="warp")
+    with pytest.raises(ValueError, match="max_batch"):
+        ServeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="buckets"):
+        ServeConfig(buckets=[4, 2])
+    with pytest.raises(ValueError, match="cover max_batch"):
+        ServeConfig(buckets=[2, 4], max_batch=16)
+    assert ServeConfig(max_batch=12).resolved_buckets() == (1, 2, 4, 8, 12)
+    with pytest.raises(ValueError, match="serve block"):
+        _cfg(serve={"engine": "warp"})
+    cfg = _cfg(serve={"max_batch": 4, "buckets": [2, 4]})
+    assert cfg.serve == ServeConfig(max_batch=4, buckets=(2, 4))
+    rt = ExperimentConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert rt == cfg
+
+
+# ------------------------------------------------------------ micro-batcher
+def test_batcher_coalesces_and_splits(ckpt):
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(d, serve=ServeConfig(max_batch=8))
+    ref = {i: s.answer([i]).logits[0] for i in range(4)}
+    with MicroBatcher(s, deadline_ms=200.0) as mb:
+        futs = [mb.submit([i, i + 1]) for i in range(3)]
+        outs = [f.result(timeout=30) for f in futs]
+        assert mb.batches == 1 and mb.coalesced == 2
+    for i, o in enumerate(outs):
+        assert isinstance(o, ServeAnswer) and o.logits.shape[0] == 2
+        np.testing.assert_array_equal(o.logits[0], ref[i])
+        np.testing.assert_array_equal(o.logits[1], ref[i + 1])
+
+
+def test_batcher_propagates_errors_and_closes(ckpt):
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(d, serve=ServeConfig(max_batch=8))
+    mb = MicroBatcher(s, deadline_ms=1.0)
+    with pytest.raises(ValueError, match="query ids"):
+        mb.submit([99_999]).result(timeout=30)
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit([1])
+
+
+# ------------------------------------- satellite 6: chunk padding vs cache
+def test_full_forward_chunk_padding_cannot_poison_cache(ckpt):
+    """chunk=100 does not divide N=256: ``full_forward`` pads the last
+    chunk under ``lax.map``. The collected aggregate stacks must carry
+    exactly the N real rows, the warmed cache exactly N entries per layer,
+    and logits served from that cache must match the unpadded forward."""
+    d, _, _ = ckpt
+    s = InferenceSession.from_checkpoint(d, serve=ServeConfig(max_batch=8))
+    assert s.N % 100 != 0
+    logits_pad = s.precompute(chunk=100)
+    feats, nbr_idx, nbr_mask = _eval_tables(s.data, s.config.eval_table_cap,
+                                            s.config.seed)
+    logits_whole = np.asarray(glasu.full_forward(
+        s.params, s.mcfg, feats, nbr_idx, nbr_mask, chunk=s.N))
+    np.testing.assert_allclose(logits_pad, logits_whole,
+                               rtol=2e-4, atol=2e-4)
+    assert len(s.cache) == len(s.mcfg.agg_layers) * s.N
+    assert all(0 <= node < s.N for node, _ in s.cache._store)
+    # every query is now a cache hit and matches the exact evaluator
+    q = np.array([0, 99, 100, 255])               # straddle chunk edges
+    ans = s.answer(q)
+    assert not ans.cold and ans.wire_bytes == 0
+    np.testing.assert_allclose(ans.logits, logits_whole.mean(0)[q],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ans.per_client, logits_whole[:, q],
+                               rtol=2e-4, atol=2e-4)

@@ -87,19 +87,27 @@ def check_file(md: Path) -> list[str]:
     return errors
 
 
-def run_quickstart(readme: Path) -> list[str]:
+def _run_section_fence(readme: Path, section: str) -> list[str]:
     text = readme.read_text()
-    m = re.search(r"## Quickstart.*?```python\n(.*?)```", text, re.S)
+    m = re.search(rf"## {section}.*?```python\n(.*?)```", text, re.S)
     if not m:
-        return [f"{readme.name}: no python fence under '## Quickstart'"]
+        return [f"{readme.name}: no python fence under '## {section}'"]
     snippet = m.group(1)
-    print(f"-- executing README quickstart ({len(snippet.splitlines())} "
-          f"lines) --")
+    print(f"-- executing README {section} fence "
+          f"({len(snippet.splitlines())} lines) --")
     try:
-        exec(compile(snippet, "<README quickstart>", "exec"), {})
+        exec(compile(snippet, f"<README {section}>", "exec"), {})
     except Exception as e:          # noqa: BLE001 — report, don't crash
-        return [f"README quickstart failed: {type(e).__name__}: {e}"]
+        return [f"README {section} fence failed: {type(e).__name__}: {e}"]
     return []
+
+
+def run_quickstart(readme: Path) -> list[str]:
+    """Execute the first python fence of Quickstart AND Serving — the two
+    advertised end-to-end five-liners (train / checkpoint-and-serve)."""
+    errors = _run_section_fence(readme, "Quickstart")
+    errors += _run_section_fence(readme, "Serving")
+    return errors
 
 
 def main() -> int:
