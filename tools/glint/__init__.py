@@ -1,0 +1,150 @@
+"""glint: static-analysis suite for this repo's JAX/Pallas codebase.
+
+Three layers, all runnable as ``python -m tools.glint`` and as tier-1 tests
+(``tests/test_glint.py``):
+
+  * **Layer 1 — AST lint** (``tools/glint/rules.py``): GL0xx rules over
+    ``src/`` and ``tests/`` for host-transfer hazards in traced code, PRNG
+    key reuse, 64-bit dtype creep, Python-loop device code in hot modules,
+    Pallas kernel hygiene (``program_id`` under vmap, grid divisibility,
+    ``BlockSpec`` memory spaces), mutable default args, unseeded RNG, dead
+    modules, and unused imports.
+  * **Layer 2 — jaxpr contracts** (``tools/glint/contracts.py``): GL2xx
+    checks that trace every registered public entry point with shape shells
+    and assert properties of the closed jaxpr / lowered IR: no f64, no host
+    callbacks on hot paths, effective buffer donation, and collective
+    traffic matching the byte-meter records term by term.
+  * **Layer 3 — runtime guards** (``tools/glint/pytest_plugin.py``): a
+    ``retrace_guard`` fixture (jit ``_cache_size`` deltas) and a
+    ``transfer_guard`` fixture (``jax.transfer_guard``) applied to the
+    round-engine and conformance suites. Registered via ``pytest.ini``
+    (``addopts = -p tools.glint.pytest_plugin``).
+
+Suppressions are inline and must carry a reason::
+
+    h = compute()  # glint: disable=GL004 static layer unroll (heterogeneous params)
+
+or file-scoped (anywhere in the file, one rule per comment)::
+
+    # glint: disable-file=GL010 loaded dynamically via configs.base registry
+
+A suppression without a reason is itself a finding (GL000). The committed
+baseline is zero unsuppressed findings over ``src/``; the CI ``analysis``
+job fails on any unsuppressed finding and reports the suppression count so
+growth stays visible PR over PR (see ``docs/ANALYSIS.md``).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+REPO = Path(__file__).resolve().parent.parent.parent
+
+# default lint roots, relative to the repo root
+DEFAULT_ROOTS = ("src", "tests")
+
+# "hot" device-code modules: Python-loop / host-transfer rules apply here
+HOT_PREFIXES = ("src/repro/core/", "src/repro/kernels/", "src/repro/serve/")
+# modules whose function bodies are (mostly) jit-traced: host-transfer
+# hazards (np.* / float() / .item() on jnp values) are flagged here
+TRACED_PREFIXES = ("src/repro/core/glasu.py", "src/repro/kernels/")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*glint:\s*(disable|disable-file)=(GL\d{3})\b[ \t]*(.*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint/contract finding (suppressed findings are dropped before
+    reporting, but counted)."""
+    rule: str                 # e.g. "GL004"
+    path: str                 # repo-relative posix path
+    line: int                 # 1-based
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass
+class Suppressions:
+    """Parsed ``# glint: disable=...`` comments for one file."""
+    line_rules: Dict[int, set] = field(default_factory=dict)   # line -> rules
+    file_rules: set = field(default_factory=set)
+    bare: List[int] = field(default_factory=list)              # missing reason
+    count: int = 0
+
+    def covers(self, rule: str, line: int) -> bool:
+        if rule in self.file_rules:
+            return True
+        return rule in self.line_rules.get(line, ())
+
+
+def parse_suppressions(text: str) -> Suppressions:
+    sup = Suppressions()
+    for i, raw in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        kind, rule, reason = m.groups()
+        sup.count += 1
+        if not reason.strip():
+            sup.bare.append(i)
+        if kind == "disable-file":
+            sup.file_rules.add(rule)
+        else:
+            sup.line_rules.setdefault(i, set()).add(rule)
+    return sup
+
+
+def lint_files(roots: Sequence[str] = DEFAULT_ROOTS,
+               repo: Optional[Path] = None) -> List[Path]:
+    """All Python files under ``roots`` (repo-relative), sorted."""
+    repo = repo or REPO
+    files: List[Path] = []
+    for root in roots:
+        base = repo / root
+        if base.is_file():
+            files.append(base)
+        elif base.is_dir():
+            files.extend(sorted(base.rglob("*.py")))
+    return files
+
+
+def run_lint(roots: Sequence[str] = DEFAULT_ROOTS,
+             repo: Optional[Path] = None,
+             rules: Optional[Sequence[str]] = None):
+    """Run the AST layer. Returns ``(findings, report)`` where ``report``
+    carries suppression accounting (see the CI ``analysis`` job)."""
+    from . import rules as rules_mod
+    repo = repo or REPO
+    files = lint_files(roots, repo)
+    active = rules_mod.resolve(rules)
+    findings: List[Finding] = []
+    suppressed = 0
+    suppression_sites = 0
+    for f in files:
+        rel = f.relative_to(repo).as_posix()
+        text = f.read_text()
+        sup = parse_suppressions(text)
+        suppression_sites += sup.count
+        for ln in sup.bare:
+            findings.append(Finding(
+                "GL000", rel, ln,
+                "suppression without a reason — say why the rule is wrong "
+                "here (`# glint: disable=GLxxx <reason>`)"))
+        raw = rules_mod.check_file(f, rel, text, active, repo=repo,
+                                   all_files=files)
+        for fd in raw:
+            if sup.covers(fd.rule, fd.line):
+                suppressed += 1
+            else:
+                findings.append(fd)
+    report = {"files": len(files), "suppressed_findings": suppressed,
+              "suppression_sites": suppression_sites}
+    return findings, report

@@ -1,0 +1,55 @@
+"""CLI: ``python -m tools.glint [--format text|json] [--rules GL001,GL002]
+[--no-contracts] [roots...]``.
+
+Exit status 0 iff zero unsuppressed findings. ``--format json`` emits the
+machine-readable report the CI ``analysis`` job uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import DEFAULT_ROOTS, REPO, run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.glint")
+    ap.add_argument("roots", nargs="*", default=list(DEFAULT_ROOTS),
+                    help="repo-relative files/dirs to lint "
+                         f"(default: {' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated GL0xx subset (default: all)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the jaxpr contract layer (GL2xx) — faster, "
+                         "no jax import")
+    args = ap.parse_args(argv)
+
+    rules = args.rules.split(",") if args.rules else None
+    findings, report = run_lint(args.roots, repo=REPO, rules=rules)
+
+    if not args.no_contracts and rules is None:
+        from . import contracts
+        cf, creport = contracts.run_contracts()
+        findings.extend(cf)
+        report["contracts"] = creport
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    report["findings"] = len(findings)
+
+    if args.format == "json":
+        json.dump({"findings": [f.to_dict() for f in findings],
+                   "report": report}, sys.stdout, indent=2)
+        print()
+    else:
+        for f in findings:
+            print(f.format())
+        print(f"glint: {len(findings)} finding(s) in {report['files']} "
+              f"file(s); {report['suppressed_findings']} suppressed "
+              f"({report['suppression_sites']} suppression site(s))")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

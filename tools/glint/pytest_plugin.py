@@ -1,0 +1,85 @@
+"""Layer 3: runtime guards as pytest fixtures.
+
+Registered session-wide via ``pytest.ini`` (``addopts = -p
+tools.glint.pytest_plugin``), so every test file can take these fixtures
+without imports:
+
+``retrace_guard``
+    Watches jitted callables' compile-cache sizes. A hot-path test warms
+    the function up, calls ``retrace_guard.watch(fn)``, keeps driving it,
+    and the fixture fails the test at teardown if ANY watched function
+    compiled again — the dispatch-cost model of the round engines (one
+    compile per (K, shapes) signature) is enforced, not assumed.
+
+``transfer_guard``
+    A context-manager factory wrapping ``jax.transfer_guard("disallow")``.
+    Inside the scope, any implicit host<->device transfer raises — jitted
+    dispatches on device-resident inputs must not touch the host. Inputs
+    are staged explicitly first (``jax.device_put`` / ``jax.device_get``
+    and ``np.asarray(jax_array)`` count as explicit and stay allowed).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import pytest
+
+
+def jit_cache_size(fn) -> int:
+    """Compile-cache size of a jitted callable (unwraps the ``._jit``
+    handle the checked round-fn builders expose)."""
+    inner = getattr(fn, "_jit", fn)
+    size = getattr(inner, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} exposes no _cache_size — pass the jitted callable "
+            f"(or a wrapper with a ._jit attribute)")
+    return size()
+
+
+class RetraceGuard:
+    """Collects (label, fn, baseline_cache_size, allowed_new_compiles)."""
+
+    def __init__(self):
+        self._watched = []
+
+    def watch(self, fn, label: str = None, max_new: int = 0):
+        """Snapshot ``fn``'s compile cache; at test teardown the test fails
+        if more than ``max_new`` new signatures were compiled. Call AFTER
+        warmup — the first dispatch is the one legitimate compile."""
+        self._watched.append((label or getattr(fn, "__name__", repr(fn)),
+                              fn, jit_cache_size(fn), max_new))
+        return fn
+
+    def check(self):
+        """Assert now (also runs automatically at teardown)."""
+        errors = []
+        for label, fn, base, max_new in self._watched:
+            delta = jit_cache_size(fn) - base
+            if delta > max_new:
+                errors.append(
+                    f"`{label}` retraced: {delta} new compile(s) after "
+                    f"watch() (allowed {max_new}) — a shape/dtype/static-"
+                    f"arg signature changed on the hot path")
+        if errors:
+            pytest.fail("retrace_guard: " + "; ".join(errors))
+
+
+@pytest.fixture
+def retrace_guard():
+    guard = RetraceGuard()
+    yield guard
+    guard.check()
+
+
+@pytest.fixture
+def transfer_guard():
+    """``with transfer_guard():`` — implicit transfers raise inside."""
+    import jax
+
+    @contextlib.contextmanager
+    def scope(level: str = "disallow"):
+        with jax.transfer_guard(level):
+            yield
+
+    return scope

@@ -1,0 +1,577 @@
+"""Layer 1: AST lint rules (GL0xx).
+
+Each rule is a function ``(module: ParsedModule, ctx: LintContext) ->
+list[Finding]`` registered in ``RULES``. Rules are deliberately lexical —
+they over-approximate and rely on reasoned inline suppressions
+(``# glint: disable=GLxxx reason``) where the code is right and the rule is
+wrong. See ``docs/ANALYSIS.md`` for the catalog with examples.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+from . import Finding, HOT_PREFIXES, TRACED_PREFIXES
+
+# jax.random samplers CONSUME a key (its stream is spent); split/fold_in
+# DERIVE fresh keys from it. A key may be derived from repeatedly (with
+# distinct fold_in constants) but once consumed it must never be used again.
+KEY_CONSUMERS = frozenset({
+    "normal", "uniform", "bernoulli", "randint", "truncated_normal",
+    "gumbel", "choice", "permutation", "categorical", "laplace",
+    "exponential", "bits", "beta", "cauchy", "dirichlet", "gamma",
+    "poisson", "rademacher", "shuffle",
+})
+KEY_DERIVERS = frozenset({"split", "fold_in"})
+
+# numpy legacy global-state RNG entry points (GL009)
+_NP_GLOBAL_RNG = frozenset({
+    "seed", "rand", "randn", "randint", "random", "choice", "shuffle",
+    "permutation", "normal", "uniform", "random_sample", "standard_normal",
+})
+
+_X64_NAMES = frozenset({"float64", "int64", "uint64", "complex128"})
+
+
+@dataclass
+class ParsedModule:
+    path: Path                # absolute
+    rel: str                  # repo-relative posix
+    text: str
+    tree: ast.Module
+
+    @property
+    def is_hot(self) -> bool:
+        return self.rel.startswith(HOT_PREFIXES)
+
+    @property
+    def is_traced(self) -> bool:
+        return self.rel.startswith(TRACED_PREFIXES)
+
+
+@dataclass
+class LintContext:
+    repo: Path
+    all_files: Sequence[Path] = ()
+    _import_graph: Optional[dict] = field(default=None, repr=False)
+
+
+# --------------------------------------------------------------- ast helpers
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.normal' for nested Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    out = []
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.append(node.id)
+    return out
+
+
+# ------------------------------------------------------------------- rules
+def rule_gl001(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL001 host-transfer hazard in traced code: ``np.*`` compute,
+    ``float()``/``int()`` casts, ``.item()``/``.tolist()`` inside modules
+    whose function bodies are jit-traced (``core/glasu.py``, ``kernels/``).
+    Any of these forces an implicit device->host sync (or a host constant
+    re-uploaded every call) in the middle of a traced round body/kernel."""
+    if not mod.is_traced:
+        return []
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name.startswith("np.") or name.startswith("numpy."):
+            # np.dtype / np.issubdtype-style metadata probes are host-only
+            # and shape-static; everything else is a transfer hazard
+            leaf = name.split(".")[-1]
+            if leaf not in ("dtype", "issubdtype", "ndim", "prod"):
+                out.append(Finding(
+                    "GL001", mod.rel, node.lineno,
+                    f"`{name}(...)` in traced module — numpy materializes "
+                    f"on host; use jnp (or hoist to untraced setup)"))
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist") and not node.args:
+            out.append(Finding(
+                "GL001", mod.rel, node.lineno,
+                f"`.{node.func.attr}()` in traced module — implicit "
+                f"device->host transfer; keep values on device or use "
+                f"jax.device_get at an explicit sync point"))
+        elif isinstance(node.func, ast.Name) \
+                and node.func.id in ("float", "int") and node.args:
+            arg = node.args[0]
+            # float(2.0), int(x.shape[0]), len(...)-style statics are fine
+            if isinstance(arg, ast.Constant):
+                continue
+            s = ast.dump(arg)
+            if "attr='shape'" in s or "func=Name(id='len'" in s:
+                continue
+            out.append(Finding(
+                "GL001", mod.rel, node.lineno,
+                f"`{node.func.id}(...)` on a non-literal in traced module — "
+                f"forces a device->host sync if the value is traced"))
+    return out
+
+
+def rule_gl002(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL002 PRNG key reuse: within one function, a key passed to a
+    ``jax.random`` sampler (consumption) must never be used again, and a key
+    may be split at most once / folded only with distinct constants.
+    Reassignment (``key, sub = split(key)``) resets the tracking."""
+    out = []
+    for fn in _functions(mod.tree):
+        # uses[name] -> list of ("consume"|"derive", line, detail)
+        uses: Dict[str, List[tuple]] = {}
+
+        class V(ast.NodeVisitor):
+            def visit_FunctionDef(self, node):
+                if node is not fn:
+                    return          # nested functions get their own pass
+                self.generic_visit(node)
+
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Lambda(self, node):
+                return          # lambda params shadow outer key names
+
+            def visit_Call(self, node):
+                name = _dotted(node.func)
+                leaf = name.split(".")[-1]
+                key_arg = None
+                if node.args and isinstance(node.args[0], ast.Name):
+                    key_arg = node.args[0].id
+                for kw in node.keywords:
+                    if kw.arg == "key" and isinstance(kw.value, ast.Name):
+                        key_arg = kw.value.id
+                is_random = (".random." in name or name.startswith("random."))\
+                    and (leaf in KEY_CONSUMERS or leaf in KEY_DERIVERS)
+                if is_random and key_arg is not None:
+                    kind = "derive" if leaf in KEY_DERIVERS else "consume"
+                    detail = None
+                    if leaf == "fold_in" and len(node.args) > 1 \
+                            and isinstance(node.args[1], ast.Constant):
+                        detail = ("fold", node.args[1].value)
+                    elif leaf == "split":
+                        detail = ("split",)
+                    prior = uses.setdefault(key_arg, [])
+                    consumed = [u for u in prior if u[0] == "consume"]
+                    if consumed:
+                        out.append(Finding(
+                            "GL002", mod.rel, node.lineno,
+                            f"key `{key_arg}` already consumed by a sampler "
+                            f"at line {consumed[0][1]} — derive subkeys "
+                            f"(split/fold_in) BEFORE sampling, never after"))
+                    elif kind == "consume" and prior:
+                        out.append(Finding(
+                            "GL002", mod.rel, node.lineno,
+                            f"key `{key_arg}` sampled after being derived "
+                            f"from at line {prior[0][1]} — sample from a "
+                            f"derived subkey instead of the parent"))
+                    elif detail is not None and detail in \
+                            [u[2] for u in prior]:
+                        dup = next(u for u in prior if u[2] == detail)
+                        what = "split twice" if detail == ("split",) else \
+                            f"fold_in with the same constant {detail[1]!r}"
+                        out.append(Finding(
+                            "GL002", mod.rel, node.lineno,
+                            f"key `{key_arg}` {what} (first at line "
+                            f"{dup[1]}) — the two streams are identical"))
+                    prior.append((kind, node.lineno, detail))
+                self.generic_visit(node)
+
+            def visit_Assign(self, node):
+                self.visit(node.value)
+                for t in node.targets:
+                    for nm in _assigned_names(t):
+                        uses.pop(nm, None)
+
+            def visit_AugAssign(self, node):
+                self.visit(node.value)
+                for nm in _assigned_names(node.target):
+                    uses.pop(nm, None)
+
+        V().visit(fn)
+    return out
+
+
+def rule_gl003(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL003 64-bit dtype creep: x64 is disabled repo-wide (the sampler's
+    int32 LUT contract, float32-ULP conformance tolerances); any explicit
+    64-bit dtype is either dead (silently truncated by jax) or doubles a
+    buffer that every meter prices at 4 B."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Attribute) and node.attr in _X64_NAMES:
+            base = _dotted(node.value)
+            if base in ("np", "numpy", "jnp", "jax.numpy"):
+                out.append(Finding(
+                    "GL003", mod.rel, node.lineno,
+                    f"`{base}.{node.attr}` — 64-bit dtype with x64 disabled "
+                    f"(use the 32-bit counterpart)"))
+        elif isinstance(node, ast.Constant) and node.value in _X64_NAMES:
+            out.append(Finding(
+                "GL003", mod.rel, node.lineno,
+                f"dtype string {node.value!r} — 64-bit dtype with x64 "
+                f"disabled (use the 32-bit counterpart)"))
+        elif isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name.endswith("config.update") and node.args \
+                    and isinstance(node.args[0], ast.Constant) \
+                    and node.args[0].value == "jax_enable_x64":
+                out.append(Finding(
+                    "GL003", mod.rel, node.lineno,
+                    "toggling jax_enable_x64 in library code — the repo "
+                    "contract is x64 off everywhere"))
+    return out
+
+
+_DEVICE_PREFIXES = ("jnp.", "jax.lax.", "jax.nn.", "jax.vmap", "jax.jit",
+                    "jax.grad", "jax.value_and_grad", "jax.random.")
+
+
+def rule_gl004(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL004 device ops inside Python loops in hot modules (core/, kernels/,
+    serve/): each iteration traces/unrolls its own copy of the op — use
+    ``lax.scan``/``lax.map`` (or vectorize) so one compiled body is reused.
+    Static unrolls that are genuinely heterogeneous (per-layer params,
+    trace-time fanout) carry a reasoned suppression instead."""
+    if not mod.is_hot:
+        return []
+    out = []
+    for loop in ast.walk(mod.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        hit = None
+        for node in ast.walk(loop):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue            # nested defs are traced at call time
+            if isinstance(node, ast.Call):
+                name = _dotted(node.func)
+                if name.startswith(_DEVICE_PREFIXES):
+                    hit = name
+                    break
+        if hit:
+            out.append(Finding(
+                "GL004", mod.rel, loop.lineno,
+                f"`{hit}` inside a Python {type(loop).__name__.lower()} "
+                f"loop in a hot module — every iteration unrolls into the "
+                f"trace; use lax.scan/lax.map or vectorize"))
+    return out
+
+
+def rule_gl005(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL005 ``pl.program_id`` in a Pallas kernel: ``jax.vmap`` over a
+    pallas_call PREPENDS a grid axis, silently shifting every program_id
+    axis — kernels reachable from vmapped call sites must take grid
+    coordinates as data (BlockSpec-indexed offset arrays) instead. Kernels
+    that are provably never vmapped suppress with that reason."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) \
+                and _dotted(node.func).endswith("program_id"):
+            out.append(Finding(
+                "GL005", mod.rel, node.lineno,
+                "`program_id` in a Pallas kernel — vmap prepends a grid "
+                "axis and shifts program_id axes; pass the coordinate as "
+                "data via a BlockSpec-indexed offsets array (see "
+                "kernels/graph_agg.py col_ref)"))
+    return out
+
+
+def rule_gl006(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL006 pallas_call grid divisibility: a ``grid=`` entry computed with
+    ``//`` silently drops remainder rows unless the operands were padded to
+    the block multiple (or divisibility is asserted) in the same function."""
+    out = []
+    for fn in _functions(mod.tree):
+        calls = [n for n in ast.walk(fn) if isinstance(n, ast.Call)
+                 and _dotted(n.func).endswith("pallas_call")]
+        if not calls:
+            continue
+        grid_divides = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.keyword) and node.arg == "grid":
+                if any(isinstance(b, ast.BinOp)
+                       and isinstance(b.op, ast.FloorDiv)
+                       for b in ast.walk(node.value)):
+                    grid_divides = True
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(b, ast.BinOp)
+                            and isinstance(b.op, ast.FloorDiv)
+                            for b in ast.walk(node.value)) \
+                    and any(nm == "grid" for t in node.targets
+                            for nm in _assigned_names(t)):
+                grid_divides = True
+        if not grid_divides:
+            continue
+        guarded = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and "pad" in _dotted(node.func):
+                guarded = True
+            if isinstance(node, ast.Assert) \
+                    and any(isinstance(b, ast.BinOp)
+                            and isinstance(b.op, ast.Mod)
+                            for b in ast.walk(node.test)):
+                guarded = True
+        if not guarded:
+            out.append(Finding(
+                "GL006", mod.rel, calls[0].lineno,
+                f"`{fn.name}` computes a pallas grid with `//` but neither "
+                f"pads operands to the block multiple nor asserts "
+                f"divisibility — remainder rows are silently dropped"))
+    return out
+
+
+def rule_gl007(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL007 ``pl.BlockSpec`` without an explicit ``memory_space``: on TPU
+    the placement default depends on shape/rank heuristics; stating
+    VMEM/SMEM/ANY per operand documents the VMEM budget math the kernel
+    docstrings do by hand and fails loudly when a tile outgrows it."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func).endswith("BlockSpec")
+                and _dotted(node.func).split(".")[0] in ("pl", "pallas")):
+            continue
+        if not any(kw.arg == "memory_space" for kw in node.keywords):
+            out.append(Finding(
+                "GL007", mod.rel, node.lineno,
+                "pl.BlockSpec without memory_space= — annotate VMEM/SMEM/"
+                "ANY so tile placement (and the VMEM budget) is explicit"))
+    return out
+
+
+def rule_gl008(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL008 mutable default argument: shared across calls; a mutated
+    default leaks state between rounds/tests."""
+    out = []
+    for fn in _functions(mod.tree):
+        for default in list(fn.args.defaults) + \
+                [d for d in fn.args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or \
+                    (isinstance(default, ast.Call)
+                     and _dotted(default.func) in ("list", "dict", "set")):
+                out.append(Finding(
+                    "GL008", mod.rel, default.lineno,
+                    f"mutable default argument in `{fn.name}` — use None "
+                    f"and construct inside the body"))
+    return out
+
+
+def rule_gl009(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL009 unseeded / global-state RNG: ``np.random.*`` legacy API and
+    stdlib ``random`` share hidden global state (non-reproducible rounds,
+    cross-test coupling); ``default_rng()`` without a seed is
+    non-reproducible. Use ``np.random.default_rng(seed)``."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if name in (f"np.random.{f}" for f in _NP_GLOBAL_RNG):
+            out.append(Finding(
+                "GL009", mod.rel, node.lineno,
+                f"`{name}` uses numpy's global RNG state — use a seeded "
+                f"np.random.default_rng(seed) Generator"))
+        elif name.endswith("default_rng") and not node.args \
+                and not node.keywords:
+            out.append(Finding(
+                "GL009", mod.rel, node.lineno,
+                "`default_rng()` without a seed — pass an explicit seed "
+                "for reproducible rounds"))
+        elif name.startswith("random.") and name.split(".")[1] in (
+                "random", "randint", "choice", "shuffle", "uniform",
+                "randrange", "sample", "seed", "gauss"):
+            out.append(Finding(
+                "GL009", mod.rel, node.lineno,
+                f"stdlib `{name}` uses global RNG state — use a seeded "
+                f"np.random.default_rng(seed) Generator"))
+    return out
+
+
+def _import_graph(ctx: LintContext) -> dict:
+    """module dotted name -> set of dotted names it imports (resolved)."""
+    if ctx._import_graph is not None:
+        return ctx._import_graph
+    graph: Dict[str, set] = {}
+    roots = set()
+    for f in ctx.all_files:
+        rel = f.relative_to(ctx.repo).as_posix()
+        if rel.startswith("src/"):
+            dotted = rel[len("src/"):-3].replace("/", ".")
+        else:
+            dotted = rel[:-3].replace("/", ".")
+        # relative imports inside __init__.py resolve against the package
+        # itself, so keep the `__init__` leaf while computing bases
+        pkg_parts = dotted.split(".")
+        dotted = dotted.removesuffix(".__init__")
+        roots.add(dotted)
+        imports = set()
+        try:
+            tree = ast.parse(f.read_text())
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    imports.add(a.name)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = pkg_parts[:-node.level] if node.level <= \
+                        len(pkg_parts) else []
+                    prefix = ".".join(base)
+                    modname = f"{prefix}.{node.module}" if node.module \
+                        else prefix
+                else:
+                    modname = node.module or ""
+                imports.add(modname)
+                for a in node.names:
+                    imports.add(f"{modname}.{a.name}")
+        graph[dotted] = imports
+    ctx._import_graph = {"graph": graph, "modules": roots}
+    return ctx._import_graph
+
+
+def rule_gl010(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL010 dead module: a ``src/`` module no other module, test, example,
+    or benchmark statically imports. Dynamically-loaded registry members
+    (``importlib`` via ``configs.base``) must say so with a file-level
+    suppression — dynamic loading is exactly how dead stubs hide."""
+    rel = mod.rel
+    if not rel.startswith("src/") or rel.endswith("__init__.py") \
+            or rel.endswith("__main__.py"):
+        return []
+    # `python -m`-style entry points are roots of the graph, not dead code
+    for node in mod.tree.body:
+        if isinstance(node, ast.If) and "__main__" in ast.dump(node.test):
+            return []
+    dotted = rel[len("src/"):-3].replace("/", ".")
+    info = _import_graph(ctx)
+    for other, imports in info["graph"].items():
+        if other == dotted:
+            continue
+        for imp in imports:
+            if imp == dotted or imp.startswith(dotted + "."):
+                return []
+    return [Finding(
+        "GL010", rel, 1,
+        f"module `{dotted}` is imported by nothing under src/tests/"
+        f"examples/benchmarks — delete it, or mark it as a dynamic "
+        f"registry member with a file-level suppression")]
+
+
+def rule_gl011(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL011 unused import (``__init__.py`` re-exports and ``__all__``
+    members excluded)."""
+    if mod.rel.endswith("__init__.py"):
+        return []
+    exported = set()
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) \
+                and any(nm == "__all__" for t in node.targets
+                        for nm in _assigned_names(t)) \
+                and isinstance(node.value, (ast.List, ast.Tuple)):
+            exported = {e.value for e in node.value.elts
+                        if isinstance(e, ast.Constant)}
+    imported: Dict[str, tuple] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = a.asname or a.name.split(".")[0]
+                imported[name] = (a.name, node.lineno)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                name = a.asname or a.name
+                imported[name] = (a.name, node.lineno)
+    used = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            base = _dotted(node)
+            if base:
+                used.add(base.split(".")[0])
+    # string-annotation / doctest references keep an import alive
+    out = []
+    for name, (target, line) in imported.items():
+        if name in used or name in exported:
+            continue
+        if f"``{name}" in mod.text or f"`{name}." in mod.text or \
+                f"{name}." in "".join(
+                    n.value for n in ast.walk(mod.tree)
+                    if isinstance(n, ast.Constant)
+                    and isinstance(n.value, str)):
+            continue
+        out.append(Finding(
+            "GL011", mod.rel, line,
+            f"`{name}` imported but unused"))
+    return out
+
+
+RULES: Dict[str, Callable] = {
+    "GL001": rule_gl001, "GL002": rule_gl002, "GL003": rule_gl003,
+    "GL004": rule_gl004, "GL005": rule_gl005, "GL006": rule_gl006,
+    "GL007": rule_gl007, "GL008": rule_gl008, "GL009": rule_gl009,
+    "GL010": rule_gl010, "GL011": rule_gl011,
+}
+
+SHORT = {
+    "GL000": "bare-suppression", "GL001": "host-transfer-in-traced-code",
+    "GL002": "prng-key-reuse", "GL003": "x64-creep",
+    "GL004": "device-op-in-python-loop", "GL005": "program-id-under-vmap",
+    "GL006": "pallas-grid-divisibility", "GL007": "blockspec-memory-space",
+    "GL008": "mutable-default-arg", "GL009": "unseeded-rng",
+    "GL010": "dead-module", "GL011": "unused-import",
+}
+
+
+def resolve(rules: Optional[Sequence[str]]) -> Dict[str, Callable]:
+    if not rules:
+        return dict(RULES)
+    unknown = set(rules) - set(RULES)
+    if unknown:
+        raise ValueError(f"unknown rule ids: {sorted(unknown)}")
+    return {r: RULES[r] for r in rules}
+
+
+def check_file(path: Path, rel: str, text: str,
+               active: Dict[str, Callable], repo: Path,
+               all_files: Sequence[Path] = ()) -> List[Finding]:
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("GL000", rel, e.lineno or 1,
+                        f"syntax error: {e.msg}")]
+    mod = ParsedModule(path=path, rel=rel, text=text, tree=tree)
+    # the cached context (and its import graph) is only valid for the same
+    # repo AND the same file set — a changed file list must invalidate it
+    ctx_key = (repo, tuple(all_files))
+    ctx = check_file._ctx if getattr(check_file, "_ctx_key", None) == ctx_key \
+        else LintContext(repo=repo, all_files=all_files)
+    check_file._ctx, check_file._ctx_key = ctx, ctx_key
+    findings: List[Finding] = []
+    for fn in active.values():
+        findings.extend(fn(mod, ctx))
+    return sorted(findings, key=lambda f: (f.line, f.rule))
