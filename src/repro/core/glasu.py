@@ -152,7 +152,11 @@ def _aggregate(cfg: GlasuConfig, h_plus, key=None):
     m = h_plus.shape[0]
     uploads = h_plus
     if cfg.secure_agg and key is not None:
-        masks = jax.random.normal(key, h_plus.shape, h_plus.dtype)
+        # masks and DP noise draw from DISTINCT derived subkeys; sampling
+        # with the raw caller key would collide with any other consumer of
+        # that key (glint GL002)
+        mkey = jax.random.fold_in(key, 0)
+        masks = jax.random.normal(mkey, h_plus.shape, h_plus.dtype)
         masks = masks - jnp.mean(masks, axis=0, keepdims=True)  # sum_m mask_m = 0
         uploads = uploads + masks
     if cfg.dp_sigma > 0.0 and key is not None:

@@ -1,0 +1,75 @@
+"""PRNG key-hygiene regression tests for the §3.6 privacy hooks.
+
+Pre-fix, ``_aggregate`` drew the secure-agg masks with the *raw* caller key
+(``jax.random.normal(key, ...)``) while the DP path derived its own subkey
+via ``fold_in(key, 1)``. Any other consumer of that raw key — including the
+caller splitting it again — would replay the exact mask stream, which is
+precisely the key-reuse hazard glint's GL002 rule exists to catch. The fix
+derives a dedicated mask subkey (``fold_in(key, 0)``); these tests pin both
+the derivation and the algebraic properties the paper requires of the masks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.glasu import GlasuConfig, _aggregate
+
+
+def _cfg(**kw):
+    return GlasuConfig(n_clients=4, n_layers=4, hidden=8, backbone="gcn",
+                       agg="mean", agg_layers=(1, 3), **kw)
+
+
+def _centered_normal(key, shape):
+    masks = jax.random.normal(key, shape, jnp.float32)
+    return masks - jnp.mean(masks, axis=0, keepdims=True)
+
+
+def test_secure_agg_masks_use_derived_subkey_not_raw_key():
+    """With zero uploads the stale buffers ARE the (scaled) masks:
+    stale = -masks/M. Recover them and check the sampling key."""
+    cfg = _cfg(secure_agg=True)
+    m, n, h = cfg.n_clients, 6, cfg.hidden
+    key = jax.random.PRNGKey(42)
+    agg, stale = _aggregate(cfg, jnp.zeros((m, n, h), jnp.float32), key)
+
+    # masks are zero-mean across clients, so the mean aggregate is exactly 0
+    np.testing.assert_allclose(np.asarray(agg), 0.0, atol=1e-6)
+
+    recovered = -np.asarray(stale) * m
+    # regression: the raw caller key must NOT be the mask sampling key
+    raw_draw = np.asarray(_centered_normal(key, (m, n, h)))
+    assert not np.allclose(recovered, raw_draw, atol=1e-5), \
+        "masks drawn with the raw caller key (GL002 key-reuse regression)"
+    # the fix pins masks to the fold_in(key, 0) derived subkey
+    derived_draw = np.asarray(_centered_normal(jax.random.fold_in(key, 0),
+                                               (m, n, h)))
+    np.testing.assert_allclose(recovered, derived_draw, atol=1e-5)
+
+
+def test_secure_agg_masks_cancel_in_mean():
+    """§3.6: pairwise-cancelling masks must leave the mean aggregate
+    bit-for-bit unchanged up to float tolerance."""
+    m, n, h = 4, 6, 8
+    h_plus = jax.random.normal(jax.random.PRNGKey(0), (m, n, h), jnp.float32)
+    agg_plain, _ = _aggregate(_cfg(), h_plus)
+    agg_masked, _ = _aggregate(_cfg(secure_agg=True), h_plus,
+                               jax.random.PRNGKey(7))
+    np.testing.assert_allclose(np.asarray(agg_masked), np.asarray(agg_plain),
+                               atol=1e-5)
+
+
+def test_mask_and_dp_noise_streams_are_distinct():
+    """Masks (fold_in 0) and DP noise (fold_in 1) must come from different
+    streams — with both hooks on, the aggregate equals plain-mean + noise-mean
+    where the noise matches an independent redraw from the DP subkey."""
+    cfg = _cfg(secure_agg=True, dp_sigma=0.5)
+    m, n, h = cfg.n_clients, 6, cfg.hidden
+    key = jax.random.PRNGKey(3)
+    agg, _ = _aggregate(cfg, jnp.zeros((m, n, h), jnp.float32), key)
+
+    noise = cfg.dp_sigma * jax.random.normal(jax.random.fold_in(key, 1),
+                                             (m, n, h), jnp.float32)
+    np.testing.assert_allclose(np.asarray(agg[0]),
+                               np.asarray(jnp.mean(noise, axis=0)),
+                               atol=1e-5)
