@@ -1,3 +1,4 @@
+# glint: disable-file=GL010 loaded dynamically via importlib in configs.base (GNN_ARCH_IDS registry)
 """GLASU split-GAT [paper §5.3 backbone study] — 2-head attention layers.
 
 Attention coefficients are client-local (each client attends over its own

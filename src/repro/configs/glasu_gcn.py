@@ -1,3 +1,4 @@
+# glint: disable-file=GL010 loaded dynamically via importlib in configs.base (GNN_ARCH_IDS registry)
 """GLASU split-GCN [paper §5.3 backbone study] — plain GCN client layers.
 
 Same split/aggregation schedule as the GCNII config; GCN is also the only

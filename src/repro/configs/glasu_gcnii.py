@@ -1,3 +1,4 @@
+# glint: disable-file=GL010 loaded dynamically via importlib in configs.base (GNN_ARCH_IDS registry)
 """GLASU split-GCNII [paper §5.1] — the headline backbone (Tables 2-4).
 
 L=4, hidden=64, M=3 clients, K=2 uniform aggregation (layers 1,3), Q=4 stale

@@ -7,8 +7,6 @@ path-derived keys so restore round-trips exact tree structure and dtypes
 from __future__ import annotations
 
 import json
-import os
-import re
 import zipfile
 from pathlib import Path
 from typing import Any, NamedTuple, Optional, Tuple
@@ -70,7 +68,7 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     assert meta["n"] == len(leaves), \
         f"checkpoint has {meta['n']} leaves, tree has {len(leaves)}"
     restored = []
-    for i, dt in enumerate(meta["dtypes"]):
+    for i, dt in enumerate(meta["dtypes"]):  # glint: disable=GL004 host-side restore over heterogeneous pytree leaves; never traced
         arr = data[f"leaf_{i}"]
         if dt == "bfloat16":
             restored.append(jnp.asarray(arr).view(jnp.bfloat16))
@@ -166,7 +164,7 @@ def load_for_inference(ckpt_dir: str, step: Optional[int] = None,
             f"leaves, the config's params+opt_state tree has {len(marks)} "
             "(different optimizer or model than experiment.json claims?)")
     p_leaves = []
-    for i, (is_param, dt) in enumerate(zip(marks, meta["dtypes"])):
+    for i, (is_param, dt) in enumerate(zip(marks, meta["dtypes"])):  # glint: disable=GL004 host-side restore over heterogeneous pytree leaves; never traced
         if not is_param:
             continue                     # opt_state member: never loaded
         try:

@@ -20,8 +20,8 @@ from __future__ import annotations
 
 import functools
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -206,7 +206,7 @@ def init_comp_state(cfg: GlasuConfig, layer_sizes: Sequence[int],
         return {}
     down_h = cfg.hidden * (cfg.n_clients if cfg.agg == "concat" else 1)
     state = {}
-    for l in cfg.agg_layers:
+    for l in cfg.agg_layers:  # glint: disable=GL004 init-time alloc over a static layer set, runs once
         n = layer_sizes[l + 1]
         state[l] = {
             "up": jnp.zeros((cfg.n_clients, n, cfg.hidden), jnp.float32),
@@ -357,7 +357,7 @@ def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None,
     h0 = h
     stale: Dict[int, Any] = {}
     new_state: Dict[int, Any] = {}
-    for l in range(cfg.n_layers):
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
         layer = _client_layer(cfg, l)
         h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
                                  batch.gather_idx[l], batch.gather_mask[l])
@@ -650,7 +650,7 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     stale: Dict[int, Any] = {}
     new_state: Dict[int, Any] = {}
     i0 = jax.lax.axis_index(axis_name) * m_loc
-    for l in range(cfg.n_layers):
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
         layer = _client_layer(cfg, l)
         h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
                                  batch.gather_idx[l], batch.gather_mask[l])
@@ -970,7 +970,7 @@ def full_forward(params, cfg: GlasuConfig, feats, nbr_idx, nbr_mask,
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
     h0 = h
     aggs: Dict[int, Any] = {}
-    for l in range(cfg.n_layers):
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; the node axis is lax.map'd via chunk_fn below
         layer = _client_layer(cfg, l)
 
         def chunk_fn(lo, h_full=h, h0_full=h0, l=l, layer=layer):
@@ -1032,7 +1032,7 @@ def serve_forward(params, batch: SampledBatch, cfg: GlasuConfig,
                                                    batch.feats)
     h0 = h
     aggs: Dict[int, Any] = {}
-    for l in range(cfg.n_layers):
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
         layer = _client_layer(cfg, l)
         h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
                                  batch.gather_idx[l], batch.gather_mask[l])
@@ -1065,7 +1065,7 @@ def sharded_serve_forward(params, batch: SampledBatch, cfg: GlasuConfig, *,
     h0 = h
     aggs: Dict[int, Any] = {}
     i0 = jax.lax.axis_index(axis_name) * m_loc
-    for l in range(cfg.n_layers):
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
         layer = _client_layer(cfg, l)
         h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
                                  batch.gather_idx[l], batch.gather_mask[l])

@@ -11,7 +11,7 @@ entries; the transformer backbone under test is real.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +88,7 @@ class TokenStream:
         self.rng = rng
 
     def batch(self, batch_size: int, seq_len: int):
-        toks = np.zeros((batch_size, seq_len + 1), np.int64)
+        toks = np.zeros((batch_size, seq_len + 1), np.int32)
         toks[:, 0] = self.rng.integers(0, self.vocab, size=batch_size)
         for t in range(seq_len):
             choice = self.rng.integers(0, 4, size=batch_size)

@@ -9,7 +9,7 @@ sampling (Alg 2) is a host/server coordination step.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
@@ -36,7 +36,7 @@ def scatter_neighbor_rows(table, indptr, indices, deg_full, cap,
     if len(iu):
         du = deg_full[iu]
         rowu = np.repeat(iu, du)
-        posu = (np.arange(len(rowu), dtype=np.int64)
+        posu = (np.arange(len(rowu), dtype=np.int32)
                 - np.repeat(np.cumsum(du) - du, du))
         table[rowu, col_offset + posu] = \
             indices[np.repeat(indptr[:-1][iu], du) + posu]
@@ -116,15 +116,17 @@ class Graph:
 def edges_to_csr(n_nodes: int, edges: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Symmetrize an (E, 2) edge list into CSR (indptr, indices)."""
     if edges.size == 0:
-        return np.zeros(n_nodes + 1, np.int64), np.zeros(0, np.int32)
+        return np.zeros(n_nodes + 1, np.int32), np.zeros(0, np.int32)
     und = np.concatenate([edges, edges[:, ::-1]], axis=0)
     und = np.unique(und, axis=0)
     und = und[und[:, 0] != und[:, 1]]  # no explicit self loops (added by sampler)
     order = np.lexsort((und[:, 1], und[:, 0]))
     und = und[order]
     counts = np.bincount(und[:, 0], minlength=n_nodes)
-    indptr = np.zeros(n_nodes + 1, dtype=np.int64)
-    np.cumsum(counts, out=indptr[1:])
+    # int32 CSR repo-wide (x64 stays off end to end): caps at 2^31 edges,
+    # far past the roadmap's 1M-node profiles
+    indptr = np.zeros(n_nodes + 1, dtype=np.int32)
+    indptr[1:] = np.cumsum(counts).astype(np.int32)
     return indptr, und[:, 1].astype(np.int32)
 
 

@@ -27,7 +27,7 @@ from __future__ import annotations
 import copy
 import queue
 import threading
-from typing import Any, List, NamedTuple, Sequence
+from typing import List, NamedTuple, Sequence
 
 import jax
 import numpy as np

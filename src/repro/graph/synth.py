@@ -74,7 +74,7 @@ def _sbm_edges(rng: np.random.Generator, labels: np.ndarray, avg_deg: float,
     classes = np.unique(labels)
     by_class = {c: np.where(labels == c)[0] for c in classes}
     # intra-class pairs
-    sizes = np.array([len(by_class[c]) for c in classes], dtype=np.float64)
+    sizes = np.array([len(by_class[c]) for c in classes], dtype=np.float64)  # glint: disable=GL003 rng.choice(p=...) needs f64 probabilities summing to 1; host-only, never shipped to device
     probs = sizes / sizes.sum()
     cls_pick = rng.choice(len(classes), size=intra, p=probs)
     src, dst = [], []
@@ -86,7 +86,7 @@ def _sbm_edges(rng: np.random.Generator, labels: np.ndarray, avg_deg: float,
     src.append(rng.integers(0, n, size=inter))
     dst.append(rng.integers(0, n, size=inter))
     e = np.stack([np.concatenate(src), np.concatenate(dst)], axis=1)
-    return e[e[:, 0] != e[:, 1]].astype(np.int64)
+    return e[e[:, 0] != e[:, 1]].astype(np.int32)
 
 
 def _class_features(rng: np.random.Generator, labels: np.ndarray, dim: int,

@@ -37,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DST_BLOCK = 128
 DOUT_BLOCK = 128
@@ -52,7 +53,7 @@ def _scatter_matrix(idx, mask, n_src):
     """
     src = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n_src), 1)
     a = jnp.zeros((idx.shape[0], n_src), jnp.float32)
-    for f in range(idx.shape[1]):
+    for f in range(idx.shape[1]):  # glint: disable=GL004 static fanout unroll at trace time (F is 3-64; see module docstring)
         a = a + jnp.where(idx[:, f:f + 1] == src, mask[:, f:f + 1], 0.0)
     return a
 
@@ -113,12 +114,17 @@ def graph_agg_pallas(h, idx, mask, w, *, interpret: bool = True):
         _graph_agg_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0)),  # idx tile
-            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0)),  # mask
-            pl.BlockSpec((h.shape[0], d), lambda i, j: (0, 0)),      # sources
-            pl.BlockSpec((d, bo), lambda i, j: (0, j)),              # W tile
+            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),                   # idx tile
+            pl.BlockSpec((DST_BLOCK, fanout), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),                   # mask
+            pl.BlockSpec((h.shape[0], d), lambda i, j: (0, 0),
+                         memory_space=pltpu.VMEM),                   # sources
+            pl.BlockSpec((d, bo), lambda i, j: (0, j),
+                         memory_space=pltpu.VMEM),                   # W tile
         ],
-        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((idx.shape[0], wp.shape[1]), w.dtype),
         interpret=interpret,
     )(idx, mask, h, wp)
@@ -172,15 +178,24 @@ def gcnii_layer_pallas(h, h0, idx, mask, w, b, *, alpha: float, beta: float,
                           block_out=bo),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0)),
-            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0)),
-            pl.BlockSpec((hp.shape[0], d_pad), lambda i, j: (0, 0)),
-            pl.BlockSpec((h0p.shape[0], d_pad), lambda i, j: (0, 0)),
-            pl.BlockSpec((d_pad, bo), lambda i, j: (0, j)),
-            pl.BlockSpec((1, bo), lambda i, j: (0, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (j, 0)),       # column offset
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((hp.shape[0], d_pad), lambda i, j: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((h0p.shape[0], d_pad), lambda i, j: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((d_pad, bo), lambda i, j: (0, j),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, bo), lambda i, j: (0, j),
+                         memory_space=pltpu.VMEM),
+            # column offset: a (1, 1) scalar tile, SMEM by the guide idiom
+            pl.BlockSpec((1, 1), lambda i, j: (j, 0),
+                         memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((idx.shape[0], d_pad), w.dtype),
         interpret=interpret,
     )(idx, mask, hp, h0p, wp, bp, col_offsets)
@@ -207,7 +222,7 @@ def _gat_kernel(idx_ref, mask_ref, h_ref, w_ref, asrc_ref, adst_ref, b_ref,
     cols = jax.lax.broadcasted_iota(jnp.int32, (n_dst, f1), 1)
     gathered = []
     e = jnp.zeros((n_dst, f1), jnp.float32)
-    for f in range(f1):
+    for f in range(f1):  # glint: disable=GL004 static fanout unroll at trace time (F is 3-64; see module docstring)
         sel = _select_matrix(idx[:, f], n_src)
         gathered.append(jnp.dot(sel, wh, preferred_element_type=jnp.float32))
         ecol = jnp.dot(sel, e_dst, preferred_element_type=jnp.float32)
@@ -245,15 +260,23 @@ def gat_layer_pallas(h, idx, mask, w, a_src, a_dst, b, *,
         _gat_kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0)),
-            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0)),
-            pl.BlockSpec((h.shape[0], d), lambda i, k: (0, 0)),
-            pl.BlockSpec((d, dh), lambda i, k: (0, k)),       # head's W
-            pl.BlockSpec((1, dh), lambda i, k: (k, 0)),       # head's a_src
-            pl.BlockSpec((1, dh), lambda i, k: (k, 0)),       # head's a_dst
-            pl.BlockSpec((1, dh), lambda i, k: (0, k)),       # head's bias
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((DST_BLOCK, fanout1), lambda i, k: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((h.shape[0], d), lambda i, k: (0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((d, dh), lambda i, k: (0, k),
+                         memory_space=pltpu.VMEM),            # head's W
+            pl.BlockSpec((1, dh), lambda i, k: (k, 0),
+                         memory_space=pltpu.VMEM),            # head's a_src
+            pl.BlockSpec((1, dh), lambda i, k: (k, 0),
+                         memory_space=pltpu.VMEM),            # head's a_dst
+            pl.BlockSpec((1, dh), lambda i, k: (0, k),
+                         memory_space=pltpu.VMEM),            # head's bias
         ],
-        out_specs=pl.BlockSpec((DST_BLOCK, dh), lambda i, k: (i, k)),
+        out_specs=pl.BlockSpec((DST_BLOCK, dh), lambda i, k: (i, k),
+                               memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((idx.shape[0], n_heads * dh), h.dtype),
         interpret=interpret,
     )(idx, mask, h, w2, a_src, a_dst, b2)

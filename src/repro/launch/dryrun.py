@@ -211,14 +211,16 @@ def lower_serve(cfg: ArchConfig, shape: InputShape, mesh):
 def run_combo(arch_id: str, shape_name: str, multi_pod: bool,
               cfg_override=None):
     shape = INPUT_SHAPES[shape_name]
-    cfg = cfg_override or get_arch(arch_id)
-    cfg = shape_overrides(cfg, shape)
-    mesh = make_production_mesh(multi_pod=multi_pod)
     rec = {"arch": arch_id, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "mode": shape.mode, "ok": False}
     t0 = time.perf_counter()
     try:
+        # inside the try: get_arch raises for ids whose full-size config
+        # module was removed — record that like any other sweep failure
+        cfg = cfg_override or get_arch(arch_id)
+        cfg = shape_overrides(cfg, shape)
+        mesh = make_production_mesh(multi_pod=multi_pod)
         if shape.mode == "train":
             lowered = lower_train(cfg, shape, mesh)
         elif shape.mode == "prefill":

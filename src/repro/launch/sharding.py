@@ -12,8 +12,6 @@ batches, and decode caches.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

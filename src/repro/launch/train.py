@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ARCH_IDS, InputShape, get_arch, get_reduced
 from ..core import checkpoint

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ from the first microstep and replaces the collective in the remaining Q-1.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +28,8 @@ from ..configs.base import ArchConfig
 from . import attention as attn
 from . import moe as moe_lib
 from . import ssm as ssm_lib
-from .layers import (BATCH, dense_init, embed_init, gelu_mlp, gelu_mlp_init,
-                     rmsnorm, rmsnorm_init, shard, shard_seq, swiglu,
-                     swiglu_init, wcol, wrow)
+from .layers import (BATCH, dense_init, embed_init, rmsnorm, rmsnorm_init,
+                     shard, shard_seq, swiglu, swiglu_init, wcol)
 
 
 def _dtype(cfg: ArchConfig):

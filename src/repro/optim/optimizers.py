@@ -9,8 +9,7 @@ Each optimizer is an (init, update) pair over arbitrary pytrees:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Union
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ must import neither jax nor any repro package — it sits below everything.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence, Tuple
 
 ENGINES = ("vmapped", "sharded")

@@ -56,3 +56,6 @@ except ImportError:
             runner.__signature__ = _inspect.Signature()
             return runner
         return deco
+
+# re-exported surface (the try-import above is the real definition site)
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -17,17 +17,13 @@ pinned at ``COMP_TOL`` rather than the bitwise/ULP contracts of the
 uncompressed engines. Within one program the math is deterministic:
 checkpoint resume is still bitwise.
 """
-import dataclasses
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.api import (CompressionConfig, ExperimentConfig,
-                       SimulationBackend, Trainer, VmappedBackend,
-                       make_backend)
+                       SimulationBackend, Trainer, VmappedBackend)
 from repro.comm import compression as comp_lib
 from repro.core import glasu
 from repro.fed import simulation

@@ -83,7 +83,7 @@ def test_fedbcd_special_case_no_graph():
     data = make_vfl_dataset("tiny", n_clients=2, seed=3)
     # erase edges: keep only self-loops via empty neighbor tables
     for c in data.clients:
-        c.indptr = np.zeros(c.n_nodes + 1, np.int64)
+        c.indptr = np.zeros(c.n_nodes + 1, np.int32)
         c.indices = np.zeros(0, np.int32)
     d_in = max(c.feat_dim for c in data.clients)
     mcfg = GlasuConfig(n_clients=2, n_layers=2, hidden=16,

@@ -10,7 +10,7 @@ from repro.graph.synth import make_vfl_dataset
 
 def _star_graph(n_leaves: int, extra_feat: int = 4) -> Graph:
     """Node 0 connected to nodes 1..n_leaves."""
-    edges = np.stack([np.zeros(n_leaves, np.int64),
+    edges = np.stack([np.zeros(n_leaves, np.int32),
                       np.arange(1, n_leaves + 1)], axis=1)
     n = n_leaves + 1
     indptr, indices = edges_to_csr(n, edges)
