@@ -115,6 +115,7 @@ class InferenceSession:
         self.metrics = ServeMetrics()
         self._lock = threading.Lock()
         self._sizes: Dict[int, list] = {}
+        self._zero_labels: Dict[int, Any] = {}   # bucket -> device zeros
 
         if serve.engine == "sharded":
             from ..launch.mesh import make_client_mesh
@@ -249,7 +250,7 @@ class InferenceSession:
 
         gi_t, gm_t, rv_t, sp_t = [], [], [], []
         lut = np.full(N, -1, dtype=np.int32)
-        for l in range(L):
+        for l in range(L):  # glint: disable=GL004 host-side numpy plan building; jnp.asarray only stages the finished tables
             src, dst = sets[l], sets[l + 1]
             n_in, n_out = sizes[l], sizes[l + 1]
             safe_dst = np.maximum(dst, 0)
@@ -287,10 +288,16 @@ class InferenceSession:
             f = (self._np_feats[:, np.maximum(src0, 0), :]
                  * (src0 >= 0)[None, :, None].astype(np.float32))
             feats = jnp.asarray(f)
+        # labels are a dead input on the serve path; stage one zeros vector
+        # per bucket explicitly (jnp.zeros here would upload its scalar
+        # fill constant on every cold dispatch — transfer_guard trips on it)
+        labels = self._zero_labels.get(bucket)
+        if labels is None:
+            labels = jnp.asarray(np.zeros(bucket, np.int32))
+            self._zero_labels[bucket] = labels
         batch = SampledBatch(
             feats=feats, gather_idx=tuple(gi_t), gather_mask=tuple(gm_t),
-            row_valid=tuple(rv_t),
-            labels=jnp.zeros(bucket, dtype=jnp.int32), self_pos=tuple(sp_t))
+            row_valid=tuple(rv_t), labels=labels, self_pos=tuple(sp_t))
         inject_dev = {l: (jnp.asarray(k), jnp.asarray(r))
                       for l, (k, r) in inject.items()}
         return QueryPlan(batch=batch, inject=inject_dev, fresh=fresh,

@@ -597,3 +597,31 @@ def test_served_repeat_query_bitwise(serve_ckpt, engine):
     np.testing.assert_array_equal(first.logits, second.logits)
     np.testing.assert_array_equal(second.logits, third.logits)
     np.testing.assert_array_equal(first.per_client, second.per_client)
+
+
+# -------------------------------------------- glint layer-3 runtime guards
+def test_backend_step_dispatch_guarded(retrace_guard, transfer_guard):
+    """One compile per (K, shapes) signature and zero implicit host traffic
+    on the warm run_step path (inputs staged explicitly up front)."""
+    cfg = _cfg("gcn", "mean")
+    data, mcfg, sampler = _setup(cfg)
+    opt = cfg.make_optimizer()
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    rounds = _sample_rounds(sampler, 3)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(1), jnp.arange(3))
+    vb = VmappedBackend()
+    vb.bind(mcfg, opt, sampler)
+    staged = [jax.device_put(jax.tree.map(jnp.asarray, stack_rounds([r])))
+              for r in rounds]
+    # pre-sliced key stacks: eager slicing inside the guard would upload
+    # its index scalars and (correctly) trip it
+    key_slices = [keys[t:t + 1] for t in range(3)]
+    p = jax.tree.map(jnp.array, params)
+    out = vb.run_step(p, opt.init(p), staged[0], key_slices[0])   # warmup
+    retrace_guard.watch(vb.step_fn, "vmapped.step_fn")
+    with transfer_guard():
+        for t in range(1, 3):
+            out = vb.run_step(out.params, out.opt_state, staged[t],
+                              key_slices[t])
+    assert np.asarray(out.losses).shape[0] == 1

@@ -6,7 +6,6 @@ loss history, same comm-byte accounting — while compiling one round body
 and dispatching once per K rounds.
 """
 import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -381,3 +380,42 @@ def test_full_forward_chunked_matches_unchunked():
         out = glasu.full_forward(params, cfg, feats, idx, mask, chunk=chunk)
         np.testing.assert_allclose(np.asarray(out), np.asarray(full),
                                    rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------- glint layer-3 runtime guards
+def test_round_fn_hot_path_is_transfer_free_and_trace_stable(
+        retrace_guard, transfer_guard):
+    """After the warmup compile, same-signature round dispatches must
+    neither recompile (retrace_guard) nor move data implicitly between host
+    and device (transfer_guard) — batches and keys are staged explicitly,
+    everything else lives on device for the whole run."""
+    _, mcfg, sampler, params = _setup()
+    opt = opt_lib.make_optimizer("adam", 0.02)
+    round_fn = glasu.make_round_fn(mcfg, opt)
+    rounds = [jax.device_put(jax.tree.map(np.array, sampler.sample_round()))
+              for _ in range(4)]
+    # pre-staged per-round keys: eager `keys[t]` indexing inside the guard
+    # would upload its index scalar and (correctly) trip it
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), t) for t in range(4)]
+    p, s = _copy(params), opt.init(_copy(params))
+    p, s, _ = round_fn(p, s, rounds[0], keys[0])      # the one compile
+    retrace_guard.watch(round_fn, "make_round_fn")
+    with transfer_guard():
+        for t in range(1, 4):
+            p, s, _ = round_fn(p, s, rounds[t], keys[t])
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p))
+
+
+def test_multi_round_fn_k_change_is_the_only_retrace(retrace_guard):
+    """The scanned step fn compiles once per K; driving a second batch at
+    the same K must hit the cache (max_new=0 after the K=2 warmup)."""
+    _, mcfg, sampler, params = _setup()
+    opt = opt_lib.make_optimizer("adam", 0.02)
+    step_fn = glasu.make_multi_round_fn(mcfg, opt)
+    rounds = [jax.tree.map(np.array, sampler.sample_round())
+              for _ in range(4)]
+    keys = jnp.stack([jax.random.PRNGKey(t) for t in range(2)])
+    p, s = _copy(params), opt.init(_copy(params))
+    p, s, _ = step_fn(p, s, stack_rounds(rounds[:2]), keys)
+    retrace_guard.watch(step_fn, "make_multi_round_fn")
+    p, s, _ = step_fn(p, s, stack_rounds(rounds[2:]), keys)

@@ -1,0 +1,159 @@
+"""ServeMetrics/ServeAnswer accounting + MicroBatcher error fan-out, driven
+under glint's layer-3 runtime guards (``retrace_guard`` / ``transfer_guard``
+from ``tools/glint/pytest_plugin.py``).
+
+The batcher tests use stub sessions — the fan-out contract (every waiter of
+a failed dispatch gets the exception; the worker survives and serves the
+next window) is independent of the model. The session-level test drives a
+real ``InferenceSession`` and checks the running counters equal the sum of
+the per-answer records while the jit caches stay frozen.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import ExperimentConfig, Trainer
+from repro.serve import InferenceSession, MicroBatcher, ServeConfig
+from repro.serve.metrics import ServeAnswer, ServeMetrics
+
+ROUNDS = 2
+
+
+@pytest.fixture(scope="module")
+def session(tmp_path_factory):
+    d = tmp_path_factory.mktemp("serve-metrics-ckpt")
+    cfg = ExperimentConfig(
+        name="serve-metrics-test", dataset="tiny", backbone="gcnii",
+        hidden=16, batch_size=8, size_cap=96, rounds=ROUNDS, lr=0.05,
+        optimizer="sgd", eval_every=ROUNDS, ckpt_dir=str(d),
+        ckpt_every=ROUNDS)
+    Trainer(cfg).run()
+    return InferenceSession.from_checkpoint(
+        d, serve=ServeConfig(max_batch=8))
+
+
+def _answer(n, *, cold, latency, fresh=None, **bytes_kw):
+    b = dict(upload_bytes=100, broadcast_bytes=40, index_bytes=8)
+    b.update(bytes_kw)
+    return ServeAnswer(
+        nodes=np.arange(n, dtype=np.int32),
+        logits=np.zeros((n, 3), np.float32),
+        per_client=np.zeros((2, n, 3), np.float32),
+        preds=np.zeros(n, np.int32), fresh_rows=fresh or {},
+        cache_hits=1, cache_misses=2, latency_s=latency, cold=cold,
+        params_version=7, **b)
+
+
+# ------------------------------------------------------------- ServeAnswer
+def test_serve_answer_wire_bytes_sums_all_legs():
+    ans = _answer(4, cold=True, latency=0.01,
+                  upload_bytes=10, broadcast_bytes=20, index_bytes=3)
+    assert ans.wire_bytes == 33
+
+
+# ------------------------------------------------------------ ServeMetrics
+def test_metrics_record_accumulates_and_merges_fresh_rows():
+    m = ServeMetrics()
+    m.record(_answer(4, cold=True, latency=0.2, fresh={1: 10, 3: 4}))
+    m.record(_answer(2, cold=False, latency=0.1, fresh={3: 6}))
+    assert m.queries == 6 and m.answers == 2
+    assert m.upload_bytes == 200 and m.broadcast_bytes == 80
+    assert m.index_bytes == 16 and m.wire_bytes == 296
+    assert m.cache_hits == 2 and m.cache_misses == 4
+    assert m.warm_answers == 1                       # only the cold=False one
+    assert m.fresh_rows == {1: 10, 3: 10}
+    assert m.latencies_s == [0.2, 0.1]
+
+
+def test_metrics_empty_percentiles_are_zero():
+    m = ServeMetrics()
+    assert m.latency_percentiles() == {"p50": 0.0, "p99": 0.0}
+    assert m.summary()["latency_p99_s"] == 0.0
+
+
+def test_metrics_percentiles_and_summary_roundtrip():
+    m = ServeMetrics()
+    for i, lat in enumerate([0.010, 0.020, 0.030, 0.500]):
+        m.record(_answer(1, cold=bool(i % 2), latency=lat))
+    pct = m.latency_percentiles()
+    assert pct["p50"] <= pct["p99"]
+    assert pct["p50"] == pytest.approx(0.025)
+    s = m.summary()
+    # the summary is what benchmarks/CI serialize — it must be pure JSON
+    assert json.loads(json.dumps(s)) == s
+    assert s["queries"] == 4 and s["wire_bytes"] == m.wire_bytes
+    assert s["fresh_rows"] == {}
+
+
+# -------------------------------------------- session counters under guard
+def test_session_metrics_match_sum_of_answers(session, retrace_guard,
+                                              transfer_guard):
+    s = session
+    warm = s.answer([0, 1])                          # compile + cold plan
+    base = dict(s.metrics.summary())
+    retrace_guard.watch(s._cls, "session._cls")
+    answers = []
+    with transfer_guard():
+        for i in range(3):
+            answers.append(s.answer([2 * i, 2 * i + 1]))
+    got = s.metrics.summary()
+    assert got["answers"] == base["answers"] + 3
+    assert got["queries"] == base["queries"] + 6
+    want_wire = base["wire_bytes"] + sum(a.wire_bytes for a in answers)
+    assert got["wire_bytes"] == want_wire
+    assert warm.wire_bytes > 0
+
+
+# ------------------------------------------------------ batcher error paths
+class _BoomSession:
+    calls = 0
+
+    def answer(self, nodes):
+        raise RuntimeError("kaboom")
+
+
+class _FlakySession:
+    """First dispatch explodes, later ones succeed."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def answer(self, nodes):
+        self.calls += 1
+        if self.calls == 1:
+            raise RuntimeError("first-call kaboom")
+        return _answer(len(nodes), cold=True, latency=0.01)
+
+
+def test_batcher_fans_error_out_to_every_waiter():
+    with MicroBatcher(_BoomSession(), max_batch=64,
+                      deadline_ms=100.0) as mb:
+        futs = [mb.submit([i]) for i in range(4)]
+        errs = []
+        for f in futs:
+            with pytest.raises(RuntimeError, match="kaboom"):
+                f.result(timeout=30)
+            errs.append(f.exception())
+        # one failed dispatch -> the SAME exception instance everywhere
+        assert all(e is errs[0] for e in errs)
+
+
+def test_batcher_worker_survives_failed_dispatch():
+    s = _FlakySession()
+    with MicroBatcher(s, max_batch=64, deadline_ms=20.0) as mb:
+        with pytest.raises(RuntimeError, match="first-call"):
+            mb.submit([0, 1]).result(timeout=30)
+        ok = mb.submit([5, 6, 7]).result(timeout=30)
+        assert isinstance(ok, ServeAnswer)
+        np.testing.assert_array_equal(ok.nodes, [5, 6, 7])
+        assert ok.logits.shape == (3, 3)
+        assert s.calls == 2 and mb.batches == 2
+
+
+def test_batcher_rejects_submit_after_close():
+    mb = MicroBatcher(_BoomSession(), max_batch=4, deadline_ms=1.0)
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit([1])
+    mb.close()                                       # idempotent
