@@ -4,6 +4,7 @@
     result = Trainer(get_preset("cora-gcnii-glasu").with_(rounds=60)).run()
 """
 from ..comm.compression import CompressionConfig
+from ..fed.faults import FaultConfig
 from ..serve.config import ServeConfig
 from .backends import (Backend, RoundResult, ShardedBackend,
                        SimulationBackend, StepResult, VmappedBackend,
@@ -11,14 +12,15 @@ from .backends import (Backend, RoundResult, ShardedBackend,
 from .config import ExperimentConfig, agg_layers_for_k
 from .presets import get_preset, list_presets, register_preset
 from .trainer import (CheckpointHook, CommMeterHook, EarlyStopHook, EvalHook,
-                      Hook, Trainer, TrainerState, step_schedule)
+                      Hook, ParticipationHook, Trainer, TrainerState,
+                      step_schedule)
 
 __all__ = [
     "Backend", "RoundResult", "StepResult", "ShardedBackend",
     "SimulationBackend", "VmappedBackend", "make_backend",
-    "CompressionConfig", "ServeConfig", "ExperimentConfig",
+    "CompressionConfig", "FaultConfig", "ServeConfig", "ExperimentConfig",
     "agg_layers_for_k",
     "get_preset", "list_presets", "register_preset", "CheckpointHook",
-    "CommMeterHook", "EarlyStopHook", "EvalHook", "Hook", "Trainer",
-    "TrainerState", "step_schedule",
+    "CommMeterHook", "EarlyStopHook", "EvalHook", "Hook",
+    "ParticipationHook", "Trainer", "TrainerState", "step_schedule",
 ]

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from ..comm.compression import make_compressor
 from ..core import glasu
 from ..core.glasu import GlasuConfig
+from ..fed import faults as faults_lib
 from ..fed import simulation
 from ..graph.prefetch import unstack_round
 from ..graph.sampler import GlasuSampler, SampledBatch
@@ -49,6 +50,10 @@ class StepResult:
     losses: Any                                   # (K, Q) per-round rows
     comm_bytes_round: int                         # bytes per round (analytic)
     message_logs: Optional[list] = None           # per-round, simulation only
+    # fault-tolerant steps only: delivered-only bytes for EACH of the K
+    # rounds (uploads dropped or late price as zero). ``comm_bytes_round``
+    # then still carries the fault-free per-round price for comparison.
+    comm_bytes_rounds: Optional[tuple] = None
 
 
 @runtime_checkable
@@ -63,14 +68,17 @@ class Backend(Protocol):
         ...
 
     def run_round(self, params, opt_state, batch: SampledBatch,
-                  key) -> RoundResult:
+                  key, faults=None) -> RoundResult:
+        """``faults`` (a ``fed.faults.RoundPlan``) runs the fault-tolerant
+        exchange; requires a fault-tolerant bind (``cfg.fault_tolerant``)."""
         ...
 
     def run_step(self, params, opt_state, batches: SampledBatch,
-                 keys) -> StepResult:
+                 keys, faults=None) -> StepResult:
         """K rounds in one call; ``batches``/``keys`` carry a leading round
         axis. params/opt_state may be donated — callers treat them as
-        consumed."""
+        consumed. ``faults``: K ``RoundPlan``s (fault-tolerant binds only).
+        """
         ...
 
     def joint_logits(self, params, batch: SampledBatch, key=None):
@@ -79,29 +87,43 @@ class Backend(Protocol):
 
 
 def run_step_sequential(backend, params, opt_state, batches: SampledBatch,
-                        keys) -> StepResult:
+                        keys, faults=None) -> StepResult:
     """K sequential ``run_round`` calls presented as one step.
 
     Used by ``SimulationBackend`` (message fidelity over throughput) and as
     the Trainer's fallback for backends written against the older
     run_round-only protocol. ``StepResult`` carries ONE per-round byte
     count, so a backend whose rounds diverge raises loudly instead of
-    letting ``CommMeterHook`` mis-accumulate.
+    letting ``CommMeterHook`` mis-accumulate — EXCEPT under ``faults``
+    (K ``RoundPlan``s), where per-round delivered bytes legitimately vary
+    with the draw and ride in ``comm_bytes_rounds``.
     """
-    losses, logs = [], []
+    losses, logs, per_round = [], [], []
     comm = None
     for i in range(len(keys)):
+        # only pass faults= when a plan is active: backends written against
+        # the older run_round-only protocol don't accept the kwarg
+        kw = {} if faults is None else {"faults": faults[i]}
         out = backend.run_round(params, opt_state,
-                                unstack_round(batches, i), keys[i])
+                                unstack_round(batches, i), keys[i], **kw)
         params, opt_state = out.params, out.opt_state
         losses.append(out.losses)
         logs.append(out.message_log)
+        per_round.append(out.comm_bytes)
+        if faults is not None:
+            continue
         if comm is None:
             comm = out.comm_bytes
         elif out.comm_bytes != comm:
             raise RuntimeError(
                 "per-round byte counts diverged within a multi-round step; "
                 "run this backend with rounds_per_step=1")
+    if faults is not None:
+        return StepResult(params, opt_state, jnp.stack(losses),
+                          getattr(backend, "bytes_per_round", 0),
+                          message_logs=logs
+                          if any(l is not None for l in logs) else None,
+                          comm_bytes_rounds=tuple(per_round))
     return StepResult(params, opt_state, jnp.stack(losses),
                       comm if comm is not None else 0,
                       message_logs=logs if any(l is not None for l in logs)
@@ -109,14 +131,36 @@ def run_step_sequential(backend, params, opt_state, batches: SampledBatch,
 
 
 def _analytic_bytes(cfg: GlasuConfig, sampler: GlasuSampler,
-                    compressor=None) -> int:
+                    compressor=None, n_uploads: Optional[int] = None) -> int:
     """Paper §3.2/§3.4 cost model; zero when nothing actually crosses
     clients. With a compressor, embedding messages are priced at their
-    exact wire size (the int32 index sync is codec-independent)."""
+    exact wire size (the int32 index sync is codec-independent). With
+    ``n_uploads`` only that many uplink messages are priced (fault rounds:
+    dropped/late uploads never reach the server)."""
     if cfg.agg_layers and cfg.n_clients > 1:
         return sampler.comm_bytes_per_joint_inference(cfg.hidden, cfg.agg,
-                                                      compressor=compressor)
+                                                      compressor=compressor,
+                                                      n_uploads=n_uploads)
     return 0
+
+
+def _round_faults(plan) -> "glasu.RoundFaults":
+    """Device-side masks for one ``RoundPlan``."""
+    return glasu.RoundFaults(present=jnp.asarray(plan.present, jnp.float32),
+                             weight=jnp.asarray(plan.weight, jnp.float32))
+
+
+def _check_fault_args(cfg: GlasuConfig, fault_state, faults):
+    if faults is not None and fault_state is None:
+        raise ValueError(
+            "faults passed to a backend bound without cfg.fault_tolerant; "
+            "set the ExperimentConfig 'faults' block (or GlasuConfig."
+            "fault_tolerant) before bind")
+    if faults is None and fault_state is not None:
+        raise ValueError(
+            "backend bound fault-tolerant but no fault plan passed: every "
+            "round of a fault-tolerant run takes its RoundPlan (a degraded "
+            "FaultConfig() draws all-present plans)")
 
 
 class VmappedBackend:
@@ -134,18 +178,33 @@ class VmappedBackend:
     def bind(self, model_cfg, optimizer, sampler):
         self.cfg = model_cfg
         self.optimizer = optimizer
+        self.sampler = sampler
         self.compressor = make_compressor(model_cfg.compression)
         self.comp_state = glasu.init_comp_state(model_cfg,
                                                 sampler.layer_sizes,
                                                 self.compressor)
+        self.fault_state = glasu.init_fault_state(model_cfg,
+                                                  sampler.layer_sizes)
         self.bytes_per_round = _analytic_bytes(model_cfg, sampler,
                                                self.compressor)
         self.step_fn = glasu.make_multi_round_fn(model_cfg, optimizer)
         self._round_fn = None                 # built lazily for run_round
 
-    def run_round(self, params, opt_state, batch, key):
+    def _fault_bytes(self, plan) -> int:
+        """Delivered-only price of one fault round (uplink × n_present)."""
+        return _analytic_bytes(self.cfg, self.sampler, self.compressor,
+                               n_uploads=plan.n_present)
+
+    def run_round(self, params, opt_state, batch, key, faults=None):
+        _check_fault_args(self.cfg, self.fault_state, faults)
         if self._round_fn is None:
             self._round_fn = glasu.make_round_fn(self.cfg, self.optimizer)
+        if self.fault_state is not None:
+            params, opt_state, self.fault_state, losses = self._round_fn(
+                params, opt_state, self.fault_state, batch, key,
+                _round_faults(faults))
+            return RoundResult(params, opt_state, losses,
+                               self._fault_bytes(faults))
         if self.compressor is None:
             params, opt_state, losses = self._round_fn(params, opt_state,
                                                        batch, key)
@@ -154,7 +213,17 @@ class VmappedBackend:
                 params, opt_state, self.comp_state, batch, key)
         return RoundResult(params, opt_state, losses, self.bytes_per_round)
 
-    def run_step(self, params, opt_state, batches, keys):
+    def run_step(self, params, opt_state, batches, keys, faults=None):
+        _check_fault_args(self.cfg, self.fault_state, faults)
+        if self.fault_state is not None:
+            present, weight = faults_lib.stack_plans(faults)
+            masks = glasu.RoundFaults(jnp.asarray(present),
+                                      jnp.asarray(weight))
+            params, opt_state, self.fault_state, losses = self.step_fn(
+                params, opt_state, self.fault_state, batches, keys, masks)
+            return StepResult(params, opt_state, losses, self.bytes_per_round,
+                              comm_bytes_rounds=tuple(
+                                  self._fault_bytes(p) for p in faults))
         if self.compressor is None:
             params, opt_state, losses = self.step_fn(params, opt_state,
                                                      batches, keys)
@@ -182,14 +251,36 @@ class SimulationBackend:
                              "privacy hooks")
         self.cfg = model_cfg
         self.optimizer = optimizer
+        self.sampler = sampler
         self.compressor = make_compressor(model_cfg.compression)
         self.comp_state = glasu.init_comp_state(model_cfg,
                                                 sampler.layer_sizes,
                                                 self.compressor)
+        self.fault_state = glasu.init_fault_state(model_cfg,
+                                                  sampler.layer_sizes)
         self.bytes_per_round = _analytic_bytes(model_cfg, sampler,
                                                self.compressor)
 
-    def run_round(self, params, opt_state, batch, key):
+    def run_round(self, params, opt_state, batch, key, faults=None):
+        _check_fault_args(self.cfg, self.fault_state, faults)
+        if self.fault_state is not None:
+            params, opt_state, losses, log, self.fault_state = \
+                simulation.simulate_fault_round(params, opt_state, batch,
+                                                self.cfg, self.optimizer,
+                                                self.fault_state, faults)
+            # delivered-only audit: the log minus dropped messages must
+            # price exactly as the analytic model with n_present uploads
+            measured = log.total_bytes(delivered_only=True)
+            expected = _analytic_bytes(self.cfg, self.sampler,
+                                       n_uploads=faults.n_present)
+            if measured != expected:
+                raise RuntimeError(
+                    f"fault-round byte-meter audit failed: delivered "
+                    f"messages carry {measured} B but the cost model with "
+                    f"{faults.n_present} delivered uploads predicts "
+                    f"{expected} B")
+            return RoundResult(params, opt_state, losses, measured,
+                               message_log=log)
         params, opt_state, losses, log, comp_state = \
             simulation.simulate_round(params, opt_state, batch, self.cfg,
                                       self.optimizer, self.compressor,
@@ -205,10 +296,11 @@ class SimulationBackend:
         comm = measured if self.cfg.n_clients > 1 else 0
         return RoundResult(params, opt_state, losses, comm, message_log=log)
 
-    def run_step(self, params, opt_state, batches, keys):
+    def run_step(self, params, opt_state, batches, keys, faults=None):
         """Sequential replay: the simulation path is about message fidelity,
         not throughput, so a step is literally K audited rounds."""
-        return run_step_sequential(self, params, opt_state, batches, keys)
+        return run_step_sequential(self, params, opt_state, batches, keys,
+                                   faults=faults)
 
     def joint_logits(self, params, batch, key=None):
         logits, _ = simulation.simulate_joint_inference(params, batch,
@@ -250,6 +342,7 @@ class ShardedBackend:
 
         self.cfg = model_cfg
         self.optimizer = optimizer
+        self.sampler = sampler
         self.mesh = self._mesh if self._mesh is not None else \
             make_client_mesh(model_cfg.n_clients,
                              max_devices=self._mesh_devices)
@@ -257,6 +350,8 @@ class ShardedBackend:
         self.comp_state = glasu.init_comp_state(model_cfg,
                                                 sampler.layer_sizes,
                                                 self.compressor)
+        self.fault_state = glasu.init_fault_state(model_cfg,
+                                                  sampler.layer_sizes)
 
         # placement shardings for inputs that arrive from off-mesh (init,
         # checkpoint restore, the host sampler): client-stacked leading dim
@@ -271,15 +366,28 @@ class ShardedBackend:
             shd.tree_shardings(
                 shd.client_comp_state_specs(self.comp_state, self.mesh),
                 self.mesh)
+        self.fault_sh = None if self.fault_state is None else \
+            shd.tree_shardings(
+                shd.client_fault_state_specs(self.fault_state, self.mesh),
+                self.mesh)
 
         # byte meter: record the aggregation collectives from an abstract
-        # trace of the round body, then audit them message-by-message
+        # trace of the round body, then audit them message-by-message.
+        # Fault-tolerant binds trace with all-present masks: the mesh
+        # collective is shape-static (it always ships M blocks), and the
+        # full-participation audit pins the meter; per-round fault prices
+        # then come from the SAME audited model with n_present uploads.
         shell = sampler.shape_shell_batch()
         records = []
         trace_fn = glasu.make_sharded_round_fn(
             model_cfg, optimizer, self.mesh, record=records.append,
             jit=False)
-        if self.compressor is None:
+        if self.fault_state is not None:
+            ones = glasu.RoundFaults(jnp.ones(model_cfg.n_clients),
+                                     jnp.ones(model_cfg.n_clients))
+            jax.eval_shape(trace_fn, params_abs, opt_abs, self.fault_state,
+                           shell, jax.random.PRNGKey(0), ones)
+        elif self.compressor is None:
             jax.eval_shape(trace_fn, params_abs, opt_abs, shell,
                            jax.random.PRNGKey(0))
         else:
@@ -330,12 +438,33 @@ class ShardedBackend:
             return self.comp_state
         return jax.device_put(self.comp_state, self.comp_sh)
 
-    def run_round(self, params, opt_state, batch, key):
+    def _placed_fault_state(self):
+        """Stale-cache carry on-mesh: every per-layer stack client-sharded."""
+        return jax.device_put(self.fault_state, self.fault_sh)
+
+    def _fault_bytes(self, plan) -> int:
+        """Delivered-only price of one fault round on the federated wire.
+
+        The mesh all_gather is shape-static (M blocks regardless of the
+        draw), so the TRAFFIC of a fault round is priced by the audited
+        cost model with n_present uploads, not re-read off collectives.
+        """
+        return _analytic_bytes(self.cfg, self.sampler, self.compressor,
+                               n_uploads=plan.n_present)
+
+    def run_round(self, params, opt_state, batch, key, faults=None):
+        _check_fault_args(self.cfg, self.fault_state, faults)
         if self._round_fn is None:
             self._round_fn = glasu.make_sharded_round_fn(
                 self.cfg, self.optimizer, self.mesh)
         params, opt_state = self._place(params, opt_state)
         batch = self._place_batch(batch, round_stacked=False)
+        if self.fault_state is not None:
+            params, opt_state, self.fault_state, losses = self._round_fn(
+                params, opt_state, self._placed_fault_state(), batch, key,
+                _round_faults(faults))
+            return RoundResult(params, opt_state, losses,
+                               self._fault_bytes(faults))
         if self.compressor is None:
             params, opt_state, losses = self._round_fn(params, opt_state,
                                                        batch, key)
@@ -344,9 +473,20 @@ class ShardedBackend:
                 params, opt_state, self._placed_comp_state(), batch, key)
         return RoundResult(params, opt_state, losses, self.bytes_per_round)
 
-    def run_step(self, params, opt_state, batches, keys):
+    def run_step(self, params, opt_state, batches, keys, faults=None):
+        _check_fault_args(self.cfg, self.fault_state, faults)
         params, opt_state = self._place(params, opt_state)
         batches = self._place_batch(batches, round_stacked=True)
+        if self.fault_state is not None:
+            present, weight = faults_lib.stack_plans(faults)
+            masks = glasu.RoundFaults(jnp.asarray(present),
+                                      jnp.asarray(weight))
+            params, opt_state, self.fault_state, losses = self.step_fn(
+                params, opt_state, self._placed_fault_state(), batches,
+                keys, masks)
+            return StepResult(params, opt_state, losses, self.bytes_per_round,
+                              comm_bytes_rounds=tuple(
+                                  self._fault_bytes(p) for p in faults))
         if self.compressor is None:
             params, opt_state, losses = self.step_fn(params, opt_state,
                                                      batches, keys)

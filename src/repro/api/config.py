@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 
 from ..comm.compression import CompressionConfig
 from ..core.glasu import GlasuConfig
+from ..fed.faults import FaultConfig
 from ..serve.config import ServeConfig
 from ..core.train import TrainConfig
 from ..graph.sampler import SamplerConfig
@@ -81,6 +82,14 @@ class ExperimentConfig:
     # is coerced to a validated ServeConfig. Resume-mutable: serving knobs
     # never affect training state.
     serve: Optional[ServeConfig] = None
+    # ---------------------------------------------------------------- faults
+    # client fault injection for the federated runtime (None = fault-free
+    # synchronous rounds). A plain dict is coerced to a validated
+    # FaultConfig; the fault draw is a SEPARATE seeded stream
+    # (faults.seed), so the same model seed trains under different fault
+    # profiles. Resume-mutable: changing the block across a resume resets
+    # the fault schedule and stale caches (fresh sidecar), never the model.
+    faults: Optional[FaultConfig] = None
     # -------------------------------------------------------------- sampler
     batch_size: int = 16
     fanout: int = 3
@@ -153,6 +162,34 @@ class ExperimentConfig:
             err("secure_agg masks cancel only exactly; compressed uploads "
                 "break the pairwise cancellation — disable one of "
                 "compression / secure_agg")
+        if isinstance(self.faults, dict):
+            try:
+                object.__setattr__(self, "faults", FaultConfig(**self.faults))
+            except (TypeError, ValueError) as e:
+                err(f"invalid faults block: {e}")
+        elif not (self.faults is None or isinstance(self.faults, FaultConfig)):
+            err(f"faults must be a FaultConfig or dict, got "
+                f"{type(self.faults).__name__}")
+        if self.faults is not None:
+            if self.compression is not None and self.compression.active:
+                err("fault tolerance and wire compression are mutually "
+                    "exclusive: the stale-cache substitution would have to "
+                    "cache dequantized uploads while EF accumulates against "
+                    "exact ones — disable one of faults / compression")
+            if self.secure_agg or self.dp_sigma > 0.0:
+                err("fault tolerance is incompatible with the §3.6 privacy "
+                    "hooks: pairwise masks and per-round DP noise assume "
+                    "every client uploads every round")
+            if self.labels_at_client is not None:
+                err("fault tolerance does not implement labels_at_client "
+                    "(the Alg 6 owner gradient assumes a synchronous "
+                    "exchange)")
+            if self.method == "standalone":
+                err("faults model the aggregation exchange; standalone has "
+                    "no communication to fault")
+            if self.model_clients < 2:
+                err("fault tolerance needs >= 2 model clients (a single "
+                    "client's absence leaves nothing to aggregate)")
 
         # method-specific derivations / constraints
         if self.method == "simulated-centralized":
@@ -254,7 +291,8 @@ class ExperimentConfig:
             gcnii_beta=self.gcnii_beta, gat_heads=self.gat_heads,
             dp_sigma=self.dp_sigma, secure_agg=self.secure_agg,
             labels_at_client=self.labels_at_client,
-            use_pallas=self.use_pallas, compression=self.compression)
+            use_pallas=self.use_pallas, compression=self.compression,
+            fault_tolerant=self.faults is not None)
 
     def sampler_config(self) -> SamplerConfig:
         return SamplerConfig(

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from ..core import checkpoint, glasu
 from ..core.train import TrainResult, _eval_tables, make_centralized_dataset
+from ..fed.faults import make_schedule
 from ..graph.prefetch import PrefetchSampler
 from ..graph.sampler import GlasuSampler
 from ..graph.synth import make_vfl_dataset
@@ -85,6 +86,7 @@ class TrainerState:
     wall_seconds: float = 0.0
     last_losses: Any = None
     sampler_rng_state: Optional[dict] = None   # after st.round rounds drawn
+    virtual_ms: float = 0.0                    # fault runs: simulated clock
 
 
 class Hook:
@@ -104,10 +106,45 @@ class Hook:
 
 
 class CommMeterHook(Hook):
-    """Accumulates the backend's per-round byte count into the run state."""
+    """Accumulates the backend's per-round byte count into the run state.
+
+    Fault-tolerant steps report per-round DELIVERED bytes (the Trainer
+    threads ``StepResult.comm_bytes_rounds`` into each round's metrics),
+    so dropped uploads never accumulate here.
+    """
 
     def on_round_end(self, trainer, metrics):
         trainer.state.comm_bytes += metrics["comm_bytes_round"]
+
+
+class ParticipationHook(Hook):
+    """Fault-run telemetry: participation rate, catch-ups, virtual clock.
+
+    Registered automatically when ``cfg.faults`` is set (before
+    ``EvalHook``, so eval entries see the stats through the eval round).
+    Each eval entry gains the running mean participation fraction, the
+    count of forced catch-up rounds, and the virtual wall-clock.
+    """
+
+    def on_train_start(self, trainer):
+        self.rounds = 0
+        self.presence = 0.0
+        self.catch_ups = 0
+
+    def on_round_end(self, trainer, metrics):
+        plan = metrics.get("fault_plan")
+        if plan is None:
+            return
+        self.rounds += 1
+        self.presence += plan.n_present / len(plan.present)
+        self.catch_ups += bool(plan.catch_up)
+        trainer.state.virtual_ms = plan.t_end
+
+    def on_eval(self, trainer, entry):
+        if self.rounds:
+            entry["participation"] = self.presence / self.rounds
+            entry["catch_up_rounds"] = self.catch_ups
+            entry["virtual_ms"] = trainer.state.virtual_ms
 
 
 class EvalHook(Hook):
@@ -191,7 +228,7 @@ class CheckpointHook(Hook):
     RESUME_MUTABLE = ("name", "rounds", "eval_every", "eval_table_cap",
                       "target_acc", "ckpt_every", "ckpt_dir",
                       "rounds_per_step", "prefetch_buffers", "mesh_devices",
-                      "compression", "serve")
+                      "compression", "serve", "faults")
 
     def __init__(self, ckpt_dir: str, every: int = 0, keep: int = 3):
         self.ckpt_dir = ckpt_dir
@@ -211,12 +248,13 @@ class CheckpointHook(Hook):
         meta = pathlib.Path(self.ckpt_dir) / "experiment.json"
         step = checkpoint.latest_step(self.ckpt_dir)
         if step is not None:
-            saved_comp = None
+            saved_comp = saved_faults = None
             if meta.exists():
                 saved = ExperimentConfig.from_dict(
                     json.loads(meta.read_text())).to_dict()
                 here = trainer.cfg.to_dict()
                 saved_comp = saved.get("compression")
+                saved_faults = saved.get("faults")
                 for k in self.RESUME_MUTABLE:
                     saved.pop(k, None)
                     here.pop(k, None)
@@ -231,6 +269,7 @@ class CheckpointHook(Hook):
             st.round = step
             self._restore_comp_state(trainer, step, saved_comp)
             loop = json.loads(self._sidecar(step).read_text())
+            self._restore_fault_state(trainer, step, saved_faults, loop)
             st.comm_bytes = loop["comm_bytes"]
             st.val_acc, st.test_acc = loop["val_acc"], loop["test_acc"]
             st.history = loop["history"]
@@ -281,6 +320,35 @@ class CheckpointHook(Hook):
         trainer.backend.comp_state = checkpoint.restore(
             self.ckpt_dir, comp_state, step, name="comp")
 
+    def _restore_fault_state(self, trainer, step: int, saved_faults, loop):
+        """Restore the stale-embedding caches + fault schedule (resume-mutable).
+
+        Same provenance contract as the EF sidecar: the caches and the
+        schedule's rng state are restored only when a ``fault_<step>.npz``
+        sidecar AND a persisted schedule state exist and the fault block
+        that wrote them matches the current one. A changed/unknown block —
+        or a run that just turned faults on — starts a fresh schedule with
+        zero caches, which is always a valid fault state (never-delivered
+        slots carry weight 0). The sidecar follows ``core.checkpoint``'s
+        loud-corruption contract; a truncated/garbled file raises rather
+        than silently training against partial caches.
+        """
+        import dataclasses
+        import pathlib
+        fault_state = getattr(trainer.backend, "fault_state", None)
+        if fault_state is None or trainer.fault_sched is None:
+            return
+        if saved_faults != dataclasses.asdict(trainer.cfg.faults):
+            return                       # fault block changed/unknown: reset
+        sched_state = loop.get("fault_sched")
+        fault_file = pathlib.Path(self.ckpt_dir) / f"fault_{step:08d}.npz"
+        if sched_state is None or not fault_file.exists():
+            return                       # pre-fault sidecar: reset
+        trainer.backend.fault_state = checkpoint.restore(
+            self.ckpt_dir, fault_state, step, name="fault")
+        trainer.fault_sched.load_state(sched_state)
+        trainer.fault_sched_restored = True
+
     def _save(self, trainer):
         import pathlib
         st = trainer.state
@@ -288,6 +356,10 @@ class CheckpointHook(Hook):
         comp_state = getattr(trainer.backend, "comp_state", None)
         if comp_state:                   # EF accumulators ride as a sidecar
             checkpoint.save(self.ckpt_dir, st.round, comp_state, name="comp")
+        fault_state = getattr(trainer.backend, "fault_state", None)
+        if fault_state is not None:      # stale caches ride as a sidecar
+            checkpoint.save(self.ckpt_dir, st.round, fault_state,
+                            name="fault")
         # the meta file records the config that WROTE the latest state —
         # updated at save time (not resume start), so a resume that dies
         # before its first save can't relabel an older codec's EF sidecar
@@ -301,12 +373,17 @@ class CheckpointHook(Hook):
              # exact resume point for the sampler stream: the generator bit
              # state after st.round rounds were drawn (json handles the
              # arbitrary-precision ints PCG64 carries)
-             "sampler_rng": st.sampler_rng_state}))
+             "sampler_rng": st.sampler_rng_state,
+             # fault schedule after st.round rounds drawn (saves land on
+             # step ends, where the host draw is exactly st.round deep)
+             "fault_sched": trainer.fault_sched.state()
+             if trainer.fault_sched is not None else None}))
         checkpoint.cleanup(self.ckpt_dir, keep=self.keep)
         live = {int(f.stem.split("_")[1])
                 for f in pathlib.Path(self.ckpt_dir).glob("ckpt_*.npz")}
         for f in list(pathlib.Path(self.ckpt_dir).glob("state_*.json")) + \
-                list(pathlib.Path(self.ckpt_dir).glob("comp_*.npz")):
+                list(pathlib.Path(self.ckpt_dir).glob("comp_*.npz")) + \
+                list(pathlib.Path(self.ckpt_dir).glob("fault_*.npz")):
             if int(f.stem.split("_")[1]) not in live:
                 f.unlink()
 
@@ -336,7 +413,13 @@ class Trainer:
         self.backend = backend if backend is not None \
             else make_backend(cfg.backend, **backend_kw)
         self.backend.bind(self.model_cfg, self.optimizer, self.sampler)
-        self.hooks: List[Hook] = [CommMeterHook(), EvalHook()]
+        # host-side fault schedule (None for fault-free runs): the Trainer
+        # owns the sequential draw; backends only ever see per-round plans
+        self.fault_sched = make_schedule(cfg.faults, self.model_cfg.n_clients)
+        self.hooks: List[Hook] = [CommMeterHook()]
+        if self.fault_sched is not None:
+            self.hooks.append(ParticipationHook())
+        self.hooks.append(EvalHook())
         if cfg.target_acc is not None:
             self.hooks.append(EarlyStopHook(cfg.target_acc))
         if cfg.ckpt_dir is not None:
@@ -346,17 +429,23 @@ class Trainer:
         # set by CheckpointHook when a sidecar restored the sampler's rng
         # bit state directly (skips the O(rounds) replay loop on resume)
         self.sampler_restored = False
+        # set by CheckpointHook when the fault sidecar restored the
+        # schedule's rng/clock state (skips the O(rounds) draw replay)
+        self.fault_sched_restored = False
 
-    def _run_step(self, params, opt_state, batches, keys):
+    def _run_step(self, params, opt_state, batches, keys, faults=None):
         """Dispatch one multi-round step; backends written against the
         older run_round-only protocol fall back to K audited sequential
         rounds (same helper the simulation backend uses)."""
         run_step = getattr(self.backend, "run_step", None)
         if run_step is not None:
+            if faults is not None:
+                return run_step(params, opt_state, batches, keys,
+                                faults=faults)
             return run_step(params, opt_state, batches, keys)
         from .backends import run_step_sequential
         return run_step_sequential(self.backend, params, opt_state,
-                                   batches, keys)
+                                   batches, keys, faults=faults)
 
     @staticmethod
     def _make_data(cfg: ExperimentConfig):
@@ -395,6 +484,13 @@ class Trainer:
             # sidecars that predate the persisted rng bit state
             for _ in range(st.round):
                 self.sampler.sample_round()
+        if st.round and self.fault_sched is not None \
+                and not self.fault_sched_restored:
+            # same replay for the fault draw: a resume without a restored
+            # schedule state (fresh/changed fault block keeps zero caches,
+            # but the DRAW must stay aligned with the round counter)
+            for _ in range(st.round):
+                self.fault_sched.next_round()
         st.sampler_rng_state = copy.deepcopy(
             self.sampler.rng.bit_generator.state)
         # every CheckpointHook's cadence cuts the schedule — a save must
@@ -413,21 +509,29 @@ class Trainer:
                 k = step.rounds
                 keys = _fold_keys(key, jnp.arange(t, t + k))
                 batches = jax.device_put(step.data)
-                out = self._run_step(st.params, st.opt_state, batches, keys)
+                plans = self.fault_sched.draw_step(k) \
+                    if self.fault_sched is not None else None
+                out = self._run_step(st.params, st.opt_state, batches, keys,
+                                     faults=plans)
                 st.params, st.opt_state = out.params, out.opt_state
                 st.sampler_rng_state = step.rng_state_after
                 # recycles the oldest generation, blocking on ITS compute
                 # only — the step just dispatched keeps running
                 prefetch.retire(step, out.losses)
                 logs = out.message_logs
+                per_round_bytes = out.comm_bytes_rounds
                 for i in range(k):
                     st.round = t + i + 1
                     # a device row, not a host value: nothing blocks until
                     # EvalHook pulls it at eval cadence
                     st.last_losses = out.losses[i]
                     metrics = {"round": st.round, "losses": out.losses[i],
-                               "comm_bytes_round": out.comm_bytes_round,
-                               "message_log": logs[i] if logs else None}
+                               "comm_bytes_round":
+                                   per_round_bytes[i]
+                                   if per_round_bytes is not None
+                                   else out.comm_bytes_round,
+                               "message_log": logs[i] if logs else None,
+                               "fault_plan": plans[i] if plans else None}
                     for h in self.hooks:
                         h.on_round_end(self, metrics)
                 t += k

@@ -56,20 +56,42 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             name: str = "ckpt") -> Any:
-    """Restore into the structure/dtypes of ``like`` (an example pytree)."""
+    """Restore into the structure/dtypes of ``like`` (an example pytree).
+
+    Errors are loud: a missing file raises FileNotFoundError; a truncated,
+    garbled, or structurally mismatched npz raises RuntimeError naming the
+    file. A resuming trainer must never silently continue on a half-read
+    state (see docs/FAULTS.md for the sidecar contract this backs).
+    """
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     fn = Path(ckpt_dir) / f"{name}_{step:08d}.npz"
-    data = np.load(fn)
-    meta = json.loads(bytes(data["__meta__"]).decode())
+    if not fn.exists():
+        raise FileNotFoundError(
+            f"no {name} checkpoint for step {step} in {ckpt_dir}; found: "
+            f"{sorted(f.name for f in Path(ckpt_dir).glob(f'{name}_*.npz'))}")
     import jax.numpy as jnp
+    try:
+        data = np.load(fn)
+        meta = json.loads(bytes(data["__meta__"]).decode())
+    except (zipfile.BadZipFile, OSError, ValueError, KeyError,
+            json.JSONDecodeError) as e:
+        raise RuntimeError(
+            f"corrupt checkpoint {fn}: {type(e).__name__}: {e}") from e
     leaves, treedef = jax.tree_util.tree_flatten(like)
-    assert meta["n"] == len(leaves), \
-        f"checkpoint has {meta['n']} leaves, tree has {len(leaves)}"
+    if meta["n"] != len(leaves):
+        raise RuntimeError(
+            f"corrupt/mismatched checkpoint {fn}: stores {meta['n']} "
+            f"leaves, restore target has {len(leaves)}")
     restored = []
     for i, dt in enumerate(meta["dtypes"]):  # glint: disable=GL004 host-side restore over heterogeneous pytree leaves; never traced
-        arr = data[f"leaf_{i}"]
+        try:
+            arr = data[f"leaf_{i}"]
+        except (zipfile.BadZipFile, KeyError, OSError, ValueError) as e:
+            raise RuntimeError(
+                f"corrupt checkpoint {fn}: leaf_{i} unreadable: "
+                f"{type(e).__name__}: {e}") from e
         if dt == "bfloat16":
             restored.append(jnp.asarray(arr).view(jnp.bfloat16))
         else:

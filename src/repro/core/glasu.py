@@ -52,6 +52,7 @@ class GlasuConfig:
     labels_at_client: Optional[int] = None  # Appendix B.2 (Alg 5-7): one label owner
     use_pallas: bool = False              # fused Pallas kernels (GCN/GCNII/GAT)
     compression: Optional[CompressionConfig] = None  # wire codec at the Agg boundary
+    fault_tolerant: bool = False          # deadline rounds + stale-cache fallback
 
     def __post_init__(self):
         if self.agg_layers:
@@ -63,6 +64,20 @@ class GlasuConfig:
             assert not self.secure_agg, \
                 "secure_agg masks cancel only exactly; quantized/sparsified " \
                 "uploads break the pairwise cancellation (disable one)"
+        if self.fault_tolerant:
+            assert self.agg_layers, \
+                "fault tolerance shapes the aggregation exchange; a " \
+                "standalone run has nothing to be tolerant about"
+            assert self.compression is None or not self.compression.active, \
+                "the fault-tolerant exchange is uncompressed (cached blocks " \
+                "would double-decode); disable one of compression / faults"
+            assert not self.secure_agg and self.dp_sigma == 0.0, \
+                "the §3.6 privacy hooks assume every round's uploads are " \
+                "fresh; cached substitutes break mask cancellation / the " \
+                "noise accounting — disable privacy hooks or faults"
+            assert self.labels_at_client is None, \
+                "labels_at_client (Alg 6) needs the owner's upload every " \
+                "round; not supported with fault injection"
 
     def layer_in_dim(self, l: int) -> int:
         """Input width of layer l (concat widens post-aggregation layers)."""
@@ -175,13 +190,21 @@ def _aggregate(cfg: GlasuConfig, h_plus, key=None):
     return jnp.broadcast_to(agg[None], (m, n, m * h)), stale
 
 
-def _combine_with_stale(cfg: GlasuConfig, stale_l, h_plus_m, m_index=None):
-    """Client-side Agg(H_{-m} (stale), H_m^{+} (fresh)) — Alg 4 line 6."""
+def _combine_with_stale(cfg: GlasuConfig, stale_l, h_plus_m, m_index=None,
+                        w=None, denom=None):
+    """Client-side Agg(H_{-m} (stale), H_m^{+} (fresh)) — Alg 4 line 6.
+
+    ``w``/``denom`` carry the fault-tolerant round's participation weight
+    for this client and the weighted-mean denominator; ``None`` (the
+    default) is the legacy bit-identical path dividing by M.
+    """
     if cfg.agg == "mean":
-        return stale_l + h_plus_m / cfg.n_clients
+        if w is None:
+            return stale_l + h_plus_m / cfg.n_clients
+        return stale_l + w * h_plus_m / denom
     n, h = h_plus_m.shape
     own = jnp.zeros((n, cfg.n_clients, h), h_plus_m.dtype)
-    own = own.at[:, m_index, :].set(h_plus_m)
+    own = own.at[:, m_index, :].set(h_plus_m if w is None else w * h_plus_m)
     return stale_l + own.reshape(n, cfg.n_clients * h)
 
 
@@ -308,10 +331,110 @@ def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
     return h_out, stale, new_ef_l
 
 
+# ------------------------------------------------- fault-tolerant exchange
+class RoundFaults(NamedTuple):
+    """Device-side view of one round's fault draw (``fed.faults.RoundPlan``).
+
+    Two shape-static ``(M,)`` float32 vectors — the jitted/scanned round
+    body never changes shape with the draw. Under ``lax.scan`` the leaves
+    carry a leading round axis K and ride in the scan's xs.
+    """
+    present: Any      # 1.0 = the client's upload arrived before the deadline
+    weight: Any       # 1.0 = fresh-or-valid-cache block enters the aggregate
+
+
+def init_fault_state(cfg: GlasuConfig, layer_sizes: Sequence[int]):
+    """Stale-embedding cache for the fault-tolerant exchange.
+
+    ``None`` when fault tolerance is off; else per aggregation layer the
+    last *delivered* upload stack, slot-keyed ``(M, n_{l+1}, hidden)``
+    exactly like the PR-5 error-feedback accumulators (``layer_sizes`` is
+    the sampler's static node-set plan, so the carry is shape-static and
+    scan/donation-friendly). Starts at zeros; a never-delivered client's
+    slot is excluded from the aggregate by its zero weight, never read.
+    """
+    if not cfg.fault_tolerant:
+        return None
+    return {l: jnp.zeros((cfg.n_clients, layer_sizes[l + 1], cfg.hidden),
+                         jnp.float32)
+            for l in cfg.agg_layers}  # glint: disable=GL004 init-time alloc over a static layer set, runs once
+
+
+def _fault_agg_math(cfg: GlasuConfig, uploads, weight):
+    """Weighted server Agg over effective (fresh-or-cached) uploads.
+
+    ``uploads``: the full (M, n, h) effective stack; ``weight``: (M,)
+    participation weights. Returns ``(h, stale, denom)`` with the same
+    shapes/semantics as ``_aggregate``. At weight == 1 everywhere this is
+    the legacy mean up to summation order (``sum(w*u)/M`` vs ``mean``),
+    which is what the degraded-mode conformance rows pin down.
+    """
+    m = uploads.shape[0]
+    w = weight[:, None, None].astype(uploads.dtype)
+    if cfg.agg == "mean":
+        # an all-zero weight row (every block aged out mid-crash) divides
+        # by 1 instead of 0; the aggregate is zeros and weights exclude it
+        denom = jnp.maximum(jnp.sum(weight), 1.0).astype(uploads.dtype)
+        agg = jnp.sum(w * uploads, axis=0) / denom          # (n, h)
+        stale = agg[None] - w * uploads / denom
+        return jnp.broadcast_to(agg[None], uploads.shape), stale, denom
+    # concat: zero-weight blocks are zeroed in place (documented: no
+    # renormalization across the concatenated width)
+    n, h = uploads.shape[1], uploads.shape[2]
+    denom = jnp.asarray(1.0, uploads.dtype)
+    agg = jnp.transpose(w * uploads, (1, 0, 2)).reshape(n, m * h)
+    own_block = jnp.eye(m, dtype=uploads.dtype)
+    blockmask = jnp.repeat(1.0 - own_block, h, axis=1)       # (M, M*h)
+    stale = agg[None] * blockmask[:, None, :]
+    return jnp.broadcast_to(agg[None], (m, n, m * h)), stale, denom
+
+
+def _fault_aggregate(cfg: GlasuConfig, h_plus, cache_l, faults: RoundFaults):
+    """Deadline-round server Agg: aggregate what arrived, substitute the
+    staleness-bounded cache for every absent client (weight excludes
+    aged-out blocks). Returns ``(h, stale, new_cache, denom)``."""
+    p = faults.present[:, None, None]
+    uploads = jnp.where(p > 0, h_plus, cache_l)   # fresh where delivered
+    h, stale, denom = _fault_agg_math(cfg, uploads, faults.weight)
+    return h, stale, uploads, denom
+
+
+def fault_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
+                          fault_state, faults: RoundFaults):
+    """Alg 3 under deadline-based partial participation.
+
+    The server aggregates whatever uploads arrived before the deadline
+    (``faults.present``) and substitutes each absent client's cached
+    embedding; blocks whose cache aged past the staleness bound carry
+    weight 0 (``faults.weight``) and are excluded. Returns
+    ``(logits, stale, new_fault_state, denom)`` — the refreshed cache is
+    threaded through the round carry next to the optimizer state.
+    """
+    feats = batch.feats
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
+    h0 = h
+    stale: Dict[int, Any] = {}
+    new_cache: Dict[int, Any] = {}
+    denom = jnp.asarray(cfg.n_clients, jnp.float32)
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l in cfg.agg_layers:
+            h, stale[l], new_cache[l], denom = _fault_aggregate(
+                cfg, h_plus, fault_state[l], faults)
+        else:
+            h = h_plus
+    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    return logits, stale, new_cache, denom
+
+
 # ------------------------------------------------------------------- forward
 def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_index,
                   stale: Optional[Dict[int, Any]] = None,
-                  return_hidden: bool = False, global_index=None):
+                  return_hidden: bool = False, global_index=None,
+                  fault_w=None, fault_denom=None):
     """One client's pass through all layers, aggregating via stale buffers.
 
     Used by LocalUpdate (Alg 4): server aggregation is replaced by the stored
@@ -322,6 +445,11 @@ def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_in
     order, which concat aggregation needs for its own-block placement. They
     differ only on the sharded backend, where each device holds a local
     block of the client axis and batch arrays are local blocks too.
+
+    ``fault_w``/``fault_denom`` (fault-tolerant rounds only) weight the
+    client's fresh block in the combine exactly as the server weighted it
+    in the aggregate — a zero-weight client trains against the global
+    aggregate with its own block excluded.
     """
     h = feats_m @ params_m["inp"]["W"] + params_m["inp"]["b"]
     h0 = h
@@ -332,7 +460,8 @@ def _client_trunk(cfg: GlasuConfig, params_m, feats_m, batch: SampledBatch, m_in
         h_plus = layer(params_m["layers"][l], h, h0, idx, mask)
         h0 = h0[batch.self_pos[l][m_index]]
         if l in cfg.agg_layers:
-            h = _combine_with_stale(cfg, stale[l], h_plus, g_index)
+            h = _combine_with_stale(cfg, stale[l], h_plus, g_index,
+                                    w=fault_w, denom=fault_denom)
         else:
             h = h_plus
     if return_hidden:
@@ -381,10 +510,12 @@ def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None,
 
 
 def client_loss(params_m, feats_m, batch: SampledBatch, stale_m, labels,
-                cfg: GlasuConfig, m_index, global_index=None):
+                cfg: GlasuConfig, m_index, global_index=None,
+                fault_w=None, fault_denom=None):
     """Client m's local objective (Alg 4 line 11) with stale buffers fixed."""
     logits = _client_trunk(cfg, params_m, feats_m, batch, m_index, stale_m,
-                           global_index=global_index)
+                           global_index=global_index, fault_w=fault_w,
+                           fault_denom=fault_denom)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.mean(nll)
@@ -411,12 +542,17 @@ def label_owner_grad(params, batch: SampledBatch, stale, cfg: GlasuConfig):
 
 def local_update_steps(params, opt_state, batch: SampledBatch, stale,
                        cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
-                       g_hl=None):
+                       g_hl=None, fault_w=None, fault_denom=None):
     """Q iterations of Alg 4 under ``lax.scan`` (same mini-batch, stale H_{-m}).
 
     With ``labels_at_client`` set (Appendix B.2, Alg 7): only the owner
     evaluates the real loss; every other client trains on the surrogate
     <g_HL, H_m[L]> whose gradient equals the chain-rule product in eq. (3).
+
+    On a fault-tolerant round ``fault_w`` is the (M,) participation-weight
+    vector and ``fault_denom`` the weighted-mean denominator: each client
+    combines its fresh block at the weight the server aggregated it with
+    (Alg 4's stale-others + fresh-own structure, weighted).
     """
     labels = batch.labels
     m_ids = jnp.arange(cfg.n_clients)
@@ -424,10 +560,11 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
     def one_step(carry, _):
         p, s = carry
 
-        def per_client(params_m, feats_m, stale_m, m_index):
+        def per_client(params_m, feats_m, stale_m, m_index, w_m=None):
             if cfg.labels_at_client is None:
                 return client_loss(params_m, feats_m, batch, stale_m, labels,
-                                   cfg, m_index)
+                                   cfg, m_index, fault_w=w_m,
+                                   fault_denom=fault_denom)
             own = client_loss(params_m, feats_m, batch, stale_m, labels,
                               cfg, m_index)
             h_l = _client_trunk(cfg, params_m, feats_m, batch, m_index,
@@ -438,8 +575,14 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
             # broadcast-gradient surrogate (they own no classifier grads)
             return jnp.where(is_owner, own, surrogate)
 
-        loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                               in_axes=(0, 0, 0, 0))(p, batch.feats, stale, m_ids)
+        if fault_w is None:
+            loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                                   in_axes=(0, 0, 0, 0))(p, batch.feats,
+                                                         stale, m_ids)
+        else:
+            loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                                   in_axes=(0, 0, 0, 0, 0))(
+                p, batch.feats, stale, m_ids, fault_w)
         updates, s = optimizer.update(grads, s, p)
         p = opt_lib.apply_updates(p, updates)
         return (p, s), jnp.mean(loss)
@@ -451,13 +594,24 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
 
 def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer, params,
                 opt_state, batch: SampledBatch, key,
-                compressor: Optional[Compressor] = None, comp_state=None):
+                compressor: Optional[Compressor] = None, comp_state=None,
+                fault_state=None, faults: Optional[RoundFaults] = None):
     """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates.
 
     With a compressor, the JointInference exchange runs compressed and the
     error-feedback carry is threaded: returns a 4-tuple
     ``(params, opt_state, comp_state, losses)`` instead of the legacy 3.
+    With ``fault_state``/``faults`` (fault-tolerant rounds; exclusive with
+    compression) the stale-cache carry is threaded the same way: returns
+    ``(params, opt_state, fault_state, losses)``.
     """
+    if fault_state is not None:
+        _, stale, fault_state, denom = fault_joint_inference(
+            params, batch, cfg, fault_state, faults)
+        params, opt_state, losses = local_update_steps(
+            params, opt_state, batch, stale, cfg, optimizer,
+            fault_w=faults.weight, fault_denom=denom)
+        return params, opt_state, fault_state, losses
     if cfg.agg_layers:
         if compressor is None:
             _, stale = joint_inference(params, batch, cfg, key)
@@ -485,7 +639,19 @@ def make_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer):
     error-feedback carry: ``(params, opt_state, comp_state, batch, key) ->
     (params, opt_state, comp_state, losses)``; otherwise the legacy
     4-arg/3-result signature is unchanged (bit-identical code path).
+    With ``cfg.fault_tolerant`` the stale-cache carry and the round's fault
+    masks are threaded instead: ``(params, opt_state, fault_state, batch,
+    key, faults) -> (params, opt_state, fault_state, losses)``.
     """
+    if cfg.fault_tolerant:
+        @jax.jit
+        def round_fn_f(params, opt_state, fault_state, batch: SampledBatch,
+                       key, faults: RoundFaults):
+            return _round_body(cfg, optimizer, params, opt_state, batch,
+                               key, fault_state=fault_state, faults=faults)
+
+        return round_fn_f
+
     comp = compression.make_compressor(cfg.compression)
     if comp is None:
         @jax.jit
@@ -531,10 +697,31 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     the scan carry next to the optimizer state and are donated with it:
     ``(params, opt_state, comp_state, batches, keys) ->
     (params, opt_state, comp_state, losses)``.
+
+    With ``cfg.fault_tolerant`` the stale-embedding cache rides in the scan
+    carry (donated) and the per-round fault masks ride in the scan xs as a
+    round-stacked ``RoundFaults`` of (K, M) leaves:
+    ``(params, opt_state, fault_state, batches, keys, faults) ->
+    (params, opt_state, fault_state, losses)``.
     """
     comp = compression.make_compressor(cfg.compression)
 
-    if comp is None:
+    if cfg.fault_tolerant:
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+        def step_fn(params, opt_state, fault_state, batches: SampledBatch,
+                    keys, faults: RoundFaults):
+            def body(carry, xs):
+                p, s, fs = carry
+                batch, key, f = xs
+                p, s, fs, losses = _round_body(cfg, optimizer, p, s, batch,
+                                               key, fault_state=fs, faults=f)
+                return (p, s, fs), losses
+
+            (params, opt_state, fault_state), losses = jax.lax.scan(
+                body, (params, opt_state, fault_state),
+                (batches, keys, faults))
+            return params, opt_state, fault_state, losses
+    elif comp is None:
         @functools.partial(jax.jit, donate_argnums=(0, 1))
         def step_fn(params, opt_state, batches: SampledBatch, keys):
             def body(carry, xs):
@@ -565,7 +752,8 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
         return step_fn
 
     def checked(*args):
-        k = args[-2].labels.shape[0]
+        batches = next(a for a in args if isinstance(a, SampledBatch))
+        k = batches.labels.shape[0]
         if k != rounds_per_step:
             raise ValueError(
                 f"multi-round step built for rounds_per_step="
@@ -622,7 +810,8 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
                             key=None, *, axis_name: str, m_loc: int,
                             record=None,
                             compressor: Optional[Compressor] = None,
-                            comp_state=None):
+                            comp_state=None, fault_state=None,
+                            faults: Optional[RoundFaults] = None):
     """Alg 3 under shard_map: per-device client blocks, collective Agg.
 
     All array leaves of ``params``/``batch`` carry the LOCAL client block
@@ -644,6 +833,15 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     Returns (local logits (m_loc, S, C), stale {l: (m_loc, n_{l+1}, h_agg)}).
     ``record``, when given, is called with a ``CollectiveRecord`` per
     aggregation layer at trace time (the byte meter's measurement hook).
+
+    With ``fault_state``/``faults`` (masks replicated, cache client-block
+    sharded) each device substitutes its local cache blocks for absent
+    clients BEFORE the gather, then the identical weighted Agg of the
+    vmapped fault path runs on the gathered effective stack; a 3rd return
+    value carries the refreshed local cache blocks. The mesh collective
+    still ships M blocks per layer (the program is shape-static); the
+    federated WIRE meter prices only delivered uploads — see
+    ``docs/FAULTS.md``.
     """
     h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], batch.feats)
     h0 = h
@@ -657,7 +855,27 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
         h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
         if l in cfg.agg_layers:
             subkey = jax.random.fold_in(key, l) if key is not None else None
-            if compressor is None:
+            if fault_state is not None:
+                p_blk = jax.lax.dynamic_slice_in_dim(faults.present, i0,
+                                                     m_loc, axis=0)
+                eff_blk = jnp.where(p_blk[:, None, None] > 0, h_plus,
+                                    fault_state[l])
+                new_state[l] = eff_blk
+                uploads = _gather_clients(eff_blk, axis_name)  # (M, n, h)
+                h_full, stale_full, _ = _fault_agg_math(cfg, uploads,
+                                                        faults.weight)
+                if record is not None:
+                    isz = jnp.dtype(uploads.dtype).itemsize
+                    record(CollectiveRecord(
+                        layer=l, n_clients=uploads.shape[0],
+                        n_rows=uploads.shape[1], width_up=uploads.shape[2],
+                        width_down=h_full.shape[-1], itemsize=isz,
+                        up_bytes=uploads.shape[1] * uploads.shape[2] * isz,
+                        down_bytes=uploads.shape[1] * h_full.shape[-1] * isz))
+                h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
+                stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0,
+                                                        m_loc, axis=0)
+            elif compressor is None:
                 uploads = _gather_clients(h_plus, axis_name)   # (M, n, h)
                 h_full, stale_full = _aggregate(cfg, uploads, subkey)
                 if record is not None:
@@ -682,19 +900,25 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
         else:
             h = h_plus
     logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
-    if compressor is None:
+    if compressor is None and fault_state is None:
         return logits, stale
     return logits, stale, new_state
 
 
 def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
                                 params, opt_state, batch: SampledBatch, stale,
-                                axis_name: str, m_loc: int):
+                                axis_name: str, m_loc: int,
+                                fault_w=None, fault_denom=None):
     """Q iterations of Alg 4 on the local client block (device-local: the
     stale buffers already hold H_{-m}, so no communication — exactly the
     paper's client-side phase). Only the reported mean loss crosses devices
     (an all_gather of Q scalars per round; diagnostics, not algorithm
-    traffic, hence unmetered)."""
+    traffic, hence unmetered).
+
+    ``fault_w`` (local (m_loc,) block of the round's participation weights)
+    and ``fault_denom`` thread the fault-tolerant combine — each client
+    weights its fresh block exactly as the server's weighted Agg did.
+    """
     labels = batch.labels
     m_local = jnp.arange(m_loc)
     m_global = jax.lax.axis_index(axis_name) * m_loc + m_local
@@ -702,13 +926,20 @@ def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     def one_step(carry, _):
         p, s = carry
 
-        def per_client(params_m, feats_m, stale_m, m_index, g_index):
+        def per_client(params_m, feats_m, stale_m, m_index, g_index,
+                       w_m=None):
             return client_loss(params_m, feats_m, batch, stale_m, labels,
-                               cfg, m_index, global_index=g_index)
+                               cfg, m_index, global_index=g_index,
+                               fault_w=w_m, fault_denom=fault_denom)
 
-        loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                               in_axes=(0, 0, 0, 0, 0))(
-            p, batch.feats, stale, m_local, m_global)
+        if fault_w is None:
+            loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                                   in_axes=(0, 0, 0, 0, 0))(
+                p, batch.feats, stale, m_local, m_global)
+        else:
+            loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                                   in_axes=(0, 0, 0, 0, 0, 0))(
+                p, batch.feats, stale, m_local, m_global, fault_w)
         updates, s = optimizer.update(grads, s, p)
         p = opt_lib.apply_updates(p, updates)
         # gather to the global (M,) loss row so the reported mean is the
@@ -724,17 +955,34 @@ def _sharded_round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
                         axis_name: str, m_loc: int, params, opt_state,
                         batch: SampledBatch, key, record=None,
                         compressor: Optional[Compressor] = None,
-                        comp_state=None):
+                        comp_state=None, fault_state=None,
+                        faults: Optional[RoundFaults] = None):
     """One GLASU round on local client blocks (Alg 1 body under shard_map).
 
     With a compressor the error-feedback carry is threaded (uplink
     accumulators hold the LOCAL client block, the downlink accumulator is
-    replicated) and a 4-tuple is returned.
+    replicated) and a 4-tuple is returned. With ``fault_state``/``faults``
+    (mutually exclusive with compression) the stale-embedding cache carry
+    is threaded instead — also a 4-tuple.
     """
     if cfg.labels_at_client is not None:
         raise NotImplementedError(
             "labels_at_client requires indexing the global client axis "
             "(Alg 6 owner gradient); use the vmapped backend")
+    if fault_state is not None:
+        _, stale, fault_state = sharded_joint_inference(
+            params, batch, cfg, key, axis_name=axis_name, m_loc=m_loc,
+            record=record, fault_state=fault_state, faults=faults)
+        i0 = jax.lax.axis_index(axis_name) * m_loc
+        w_blk = jax.lax.dynamic_slice_in_dim(faults.weight, i0, m_loc, axis=0)
+        if cfg.agg == "mean":
+            denom = jnp.maximum(jnp.sum(faults.weight), 1.0)
+        else:
+            denom = jnp.asarray(1.0, jnp.float32)
+        params, opt_state, losses = _sharded_local_update_steps(
+            cfg, optimizer, params, opt_state, batch, stale, axis_name,
+            m_loc, fault_w=w_blk, fault_denom=denom)
+        return params, opt_state, fault_state, losses
     if cfg.agg_layers:
         if compressor is None:
             _, stale = sharded_joint_inference(params, batch, cfg, key,
@@ -808,6 +1056,15 @@ def _comp_state_specs(cfg: GlasuConfig, comp: Optional[Compressor],
     return {l: {"up": P(axis), "down": P()} for l in cfg.agg_layers}
 
 
+def _fault_state_specs(cfg: GlasuConfig, axis: str):
+    """shard_map specs for the stale-embedding cache carry: each device
+    holds its LOCAL client block of every per-layer cache stack (the same
+    layout as the uplink error-feedback accumulators)."""
+    from jax.sharding import PartitionSpec as P
+
+    return {l: P(axis) for l in cfg.agg_layers}
+
+
 def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
                           mesh, axis: str = "clients", record=None,
                           jit: bool = True):
@@ -817,12 +1074,31 @@ def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     collectives at trace time; ``jit=False`` returns the bare shard_map'd
     callable, which is what the byte meter abstractly evaluates at bind.
     With ``cfg.compression`` active the signature gains the error-feedback
-    carry: ``(params, opt_state, comp_state, batch, key)``."""
+    carry: ``(params, opt_state, comp_state, batch, key)``; with
+    ``cfg.fault_tolerant`` it gains the stale-cache carry and the round's
+    fault masks: ``(params, opt_state, fault_state, batch, key, faults)``."""
     from jax.experimental.shard_map import shard_map
 
     m_loc = _client_axis_check(cfg, mesh, axis)
     pspecs, ospecs, bspecs = _sharded_specs(cfg, optimizer, axis)
     from jax.sharding import PartitionSpec as P
+
+    if cfg.fault_tolerant:
+        fspecs = _fault_state_specs(cfg, axis)
+        mask_specs = RoundFaults(present=P(), weight=P())
+
+        def body_f(params, opt_state, fault_state, batch, key, faults):
+            p, s, fs, losses = _sharded_round_body(
+                cfg, optimizer, axis, m_loc, params, opt_state, batch, key,
+                record=record, fault_state=fault_state, faults=faults)
+            return p, s, fs, losses
+
+        fn = shard_map(body_f, mesh=mesh,
+                       in_specs=(pspecs, ospecs, fspecs, bspecs, P(),
+                                 mask_specs),
+                       out_specs=(pspecs, ospecs, fspecs, P()),
+                       check_rep=False)
+        return jax.jit(fn) if jit else fn
 
     comp = compression.make_compressor(cfg.compression)
     if comp is None:
@@ -861,7 +1137,34 @@ def make_sharded_multi_round_fn(cfg: GlasuConfig,
     _, _, bspecs_k = _sharded_specs(cfg, optimizer, axis, round_stacked=True)
     comp = compression.make_compressor(cfg.compression)
 
-    if comp is None:
+    if cfg.fault_tolerant:
+        fspecs = _fault_state_specs(cfg, axis)
+        # (K, M) mask stacks ride the scan xs, replicated across devices
+        mask_specs = RoundFaults(present=P(), weight=P())
+
+        def scan_body_f(params, opt_state, fault_state, batches, keys,
+                        faults):
+            def body(carry, xs):
+                p, s, fs = carry
+                batch, key, f = xs
+                p, s, fs, losses = _sharded_round_body(
+                    cfg, optimizer, axis, m_loc, p, s, batch, key,
+                    fault_state=fs, faults=f)
+                return (p, s, fs), losses
+
+            (params, opt_state, fault_state), losses = jax.lax.scan(
+                body, (params, opt_state, fault_state),
+                (batches, keys, faults))
+            return params, opt_state, fault_state, losses
+
+        step_fn = jax.jit(
+            shard_map(scan_body_f, mesh=mesh,
+                      in_specs=(pspecs, ospecs, fspecs, bspecs_k, P(),
+                                mask_specs),
+                      out_specs=(pspecs, ospecs, fspecs, P()),
+                      check_rep=False),
+            donate_argnums=(0, 1, 2))
+    elif comp is None:
         def scan_body(params, opt_state, batches, keys):
             def body(carry, xs):
                 p, s = carry
@@ -906,7 +1209,8 @@ def make_sharded_multi_round_fn(cfg: GlasuConfig,
         return step_fn
 
     def checked(*args):
-        k = args[-2].labels.shape[0]
+        batches = next(a for a in args if isinstance(a, SampledBatch))
+        k = batches.labels.shape[0]
         if k != rounds_per_step:
             raise ValueError(
                 f"sharded multi-round step built for rounds_per_step="

@@ -30,34 +30,52 @@ class Message:
     kind: str                 # 'upload' | 'broadcast' | 'index_sync'
     layer: int
     nbytes: int
+    t: float = 0.0            # virtual ms when the message lands
+    dropped: bool = False     # sent but never delivered (lost or past deadline)
 
 
 @dataclass
 class MessageLog:
     messages: List[Message] = field(default_factory=list)
 
-    def send(self, sender, receiver, kind, layer, payload):
+    def send(self, sender, receiver, kind, layer, payload,
+             t: float = 0.0, dropped: bool = False):
         """Log one message; ``payload`` is an array or a pytree of arrays
         (a compressed wire message: codes + scales, values + indices)."""
         nbytes = sum(int(np.asarray(leaf).size
                          * np.asarray(leaf).dtype.itemsize)
                      for leaf in jax.tree.leaves(payload))
-        self.send_nbytes(sender, receiver, kind, layer, nbytes)
+        self.send_nbytes(sender, receiver, kind, layer, nbytes,
+                         t=t, dropped=dropped)
 
-    def send_nbytes(self, sender, receiver, kind, layer, nbytes: int):
+    def send_nbytes(self, sender, receiver, kind, layer, nbytes: int,
+                    t: float = 0.0, dropped: bool = False):
         """Log one message by its exact wire size (shape-only replays)."""
         self.messages.append(Message(sender, receiver, kind, layer,
-                                     int(nbytes)))
+                                     int(nbytes), float(t), bool(dropped)))
 
-    def total_bytes(self, kind=None) -> int:
+    def total_bytes(self, kind=None, delivered_only: bool = True) -> int:
+        """Sum of wire bytes, optionally filtered by ``kind``.
+
+        ``delivered_only`` (the default) excludes dropped messages: a lost
+        or past-deadline upload never reaches the server, so it must not
+        count toward the audited communication cost. Pass
+        ``delivered_only=False`` to price the traffic the clients SENT
+        (delivered + dropped).
+        """
         return sum(m.nbytes for m in self.messages
-                   if kind is None or m.kind == kind)
+                   if (kind is None or m.kind == kind)
+                   and (not delivered_only or not m.dropped))
+
+    def dropped_messages(self) -> List[Message]:
+        return [m for m in self.messages if m.dropped]
 
 
 def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
                              log: MessageLog = None,
                              return_stale: bool = False,
-                             compressor: Compressor = None, comp_state=None):
+                             compressor: Compressor = None, comp_state=None,
+                             fault_state=None, plan=None):
     """Alg 3 with explicit messages. Returns (per-client logits, log), or
     (logits, stale, log) with ``return_stale=True`` where ``stale`` is the
     Extract buffer dict {l: (M, n_{l+1}, h)} matching ``glasu.joint_inference``.
@@ -75,8 +93,19 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     its exact fresh block (the same protocol as
     ``glasu._compressed_aggregate``, implemented independently). In that
     mode the return tuples gain a trailing ``new_comp_state``.
+
+    With ``fault_state``/``plan`` (a ``fed.faults.RoundPlan``; mutually
+    exclusive with ``compressor``) the deadline round is replayed message
+    by message: every ATTEMPTED upload is logged at its virtual arrival
+    time ``plan.t_start + latency``, with ``dropped=True`` when it was
+    lost or landed past the deadline (dropped messages never count on the
+    delivered-only meter). The server substitutes each absent client's
+    cached block, aggregates with the plan's weights (the same weighted
+    Agg as ``glasu._fault_agg_math``), and broadcasts at ``plan.t_end``.
+    The return tuples gain a trailing ``new_fault_state``.
     """
     assert cfg.agg == "mean"
+    assert compressor is None or fault_state is None
     m_clients = cfg.n_clients
     log = log if log is not None else MessageLog()
     stale: Dict[int, Any] = {}
@@ -100,7 +129,30 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
             h_plus.append(hp)
             h0[m] = h0[m][batch.self_pos[l][m]]
         if l in cfg.agg_layers:
-            if compressor is None:
+            if fault_state is not None:
+                w = np.asarray(plan.weight, np.float64)  # glint: disable=GL003 host-side reference aggregation; f64 accumulation keeps the python-float replay deterministic
+                denom = max(float(w.sum()), 1.0)
+                eff = []
+                for m in range(m_clients):
+                    if plan.attempted[m]:              # sent an upload
+                        lat = float(plan.latency_ms[m])
+                        t_arrive = (plan.t_start + lat if np.isfinite(lat)
+                                    else plan.t_end)
+                        log.send(f"client{m}", "server", "upload", l,
+                                 h_plus[m], t=t_arrive,
+                                 dropped=plan.present[m] == 0)
+                    eff.append(h_plus[m] if plan.present[m] > 0
+                               else fault_state[l][m])
+                agg = sum(float(w[m]) * eff[m]
+                          for m in range(m_clients)) / denom
+                for m in range(m_clients):             # broadcasts at close
+                    log.send("server", f"client{m}", "broadcast", l, agg,
+                             t=plan.t_end)
+                    h[m] = agg
+                stale[l] = jnp.stack([agg - float(w[m]) * eff[m] / denom
+                                      for m in range(m_clients)])
+                new_state[l] = jnp.stack(eff)
+            elif compressor is None:
                 for m in range(m_clients):             # uploads
                     log.send(f"client{m}", "server", "upload", l, h_plus[m])
                 agg = sum(h_plus) / m_clients          # server mean (Agg)
@@ -148,12 +200,13 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     if return_stale:
         out = out + (stale,)
     out = out + (log,)
-    if compressor is not None:
+    if compressor is not None or fault_state is not None:
         out = out + (new_state,)
     return out
 
 
-def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
+def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig,
+                   t: float = 0.0):
     """Replay Alg 2's index-set coordination as messages.
 
     At every layer boundary ``j`` whose node set is shared — ``j == L`` (the
@@ -174,8 +227,8 @@ def log_index_sync(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig):
             continue
         payload = np.zeros(sizes[j], idx_dtype)
         for m in range(cfg.n_clients):
-            log.send(f"client{m}", "server", "index_sync", j, payload)
-            log.send("server", f"client{m}", "index_sync", j, payload)
+            log.send(f"client{m}", "server", "index_sync", j, payload, t=t)
+            log.send("server", f"client{m}", "index_sync", j, payload, t=t)
 
 
 def log_agg_traffic(log: MessageLog, batch: SampledBatch, cfg: GlasuConfig,
@@ -278,3 +331,29 @@ def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
     params, opt_state, losses = glasu.local_update_steps(
         params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
     return params, opt_state, losses, log, comp_state
+
+
+def simulate_fault_round(params, opt_state, batch: SampledBatch,
+                         cfg: GlasuConfig, optimizer, fault_state, plan):
+    """One fault-tolerant GLASU round over explicit, timestamped messages.
+
+    The index sync opens the round at ``plan.t_start`` (every client —
+    present or not — coordinates node sets and runs its local updates);
+    the aggregation exchange replays the deadline protocol of
+    ``simulate_joint_inference`` with ``fault_state``/``plan``. The Q
+    LocalUpdates weight each client's fresh block exactly as the server's
+    weighted Agg did (``fault_w``/``fault_denom``).
+
+    Returns (params, opt_state, losses, log, new_fault_state).
+    """
+    log = MessageLog()
+    log_index_sync(log, batch, cfg, t=plan.t_start)
+    _, stale, _, new_cache = simulate_joint_inference(
+        params, batch, cfg, log=log, return_stale=True,
+        fault_state=fault_state, plan=plan)
+    w = jnp.asarray(plan.weight, jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    params, opt_state, losses = glasu.local_update_steps(
+        params, opt_state, batch, stale, cfg, optimizer,
+        fault_w=w, fault_denom=denom)
+    return params, opt_state, losses, log, new_cache

@@ -125,6 +125,8 @@ class PrefetchSampler:
                 buf = self._bufs[gen]
                 view = unstack_round(buf, slice(0, k))
                 for i in range(k):
+                    if self._stop.is_set():  # close() mid-fill: exit promptly
+                        return               # instead of finishing the step
                     b = self.sampler.sample_round()
                     jax.tree.map(lambda dst, src, i=i: np.copyto(dst[i], src),
                                  view, b)

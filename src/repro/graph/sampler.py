@@ -275,23 +275,34 @@ class GlasuSampler:
             self_pos=sp)
 
     def comm_bytes_per_joint_inference(self, hidden: int, agg: str = "mean",
-                                       compressor=None) -> int:
+                                       compressor=None,
+                                       n_uploads: int | None = None) -> int:
         """Paper cost model: per aggregation layer, every client uploads its
         (n_{l+1}, h) block and receives the aggregate back; plus index sync.
 
         With a ``compressor`` (``comm.compression.Compressor``) embedding
         messages are priced at their exact wire size instead of 4 B/float;
         the int32 index-sync traffic is codec-independent and unchanged.
+
+        ``n_uploads`` (fault-tolerant rounds) prices only the uploads that
+        were DELIVERED by the deadline — a dropped or late upload never
+        reaches the server, so it costs zero on the wire. Downlink and
+        index sync still go to all M clients: every client (present or
+        not) runs its local updates against the broadcast aggregate.
         """
+        m_up = self.M if n_uploads is None else int(n_uploads)
+        if not 0 <= m_up <= self.M:
+            raise ValueError(f"n_uploads must be in [0, {self.M}], "
+                             f"got {n_uploads}")
         total = 0
         for l in self.cfg.agg_layers:
             n = self.layer_sizes[l + 1]
             down_h = hidden * (self.M if agg == "concat" else 1)
             if compressor is None:
-                up = self.M * n * hidden * 4
+                up = m_up * n * hidden * 4
                 down = self.M * n * down_h * 4
             else:
-                up = self.M * compressor.wire_bytes(n, hidden)
+                up = m_up * compressor.wire_bytes(n, hidden)
                 down = self.M * compressor.wire_bytes(n, down_h)
             total += up + down
         for j in range(self.cfg.n_layers + 1):

@@ -93,8 +93,8 @@ def _add_fsdp(mesh, leaf, spec):
         return spec
     try:
         nbytes = leaf.size * leaf.dtype.itemsize
-    except Exception:
-        return spec
+    except (AttributeError, TypeError):
+        return spec  # abstract/spec leaf without size metadata: skip FSDP
     if nbytes < _FSDP_MIN_BYTES or leaf.ndim < 2:
         return spec
     dp = mesh.shape["data"]
@@ -256,3 +256,13 @@ def client_comp_state_specs(comp_state, mesh: Mesh, axis: str = "clients"):
     client rule), the downlink accumulator is server state (replicated)."""
     return {l: {"up": client_leaf_spec(st["up"], mesh, axis), "down": P()}
             for l, st in comp_state.items()}
+
+
+def client_fault_state_specs(fault_state, mesh: Mesh, axis: str = "clients"):
+    """Specs for the fault-tolerant stale-embedding cache
+    (``core.glasu.init_fault_state``): every per-layer cache stack is
+    client-stacked ``(M, n, h)`` and shards its client dim over ``axis``
+    (guarded). The round's ``RoundFaults`` masks are replicated — they are
+    (M,) vectors every device reads in full."""
+    return {l: client_leaf_spec(cache, mesh, axis)
+            for l, cache in fault_state.items()}

@@ -33,6 +33,7 @@ from repro.api import (ExperimentConfig, ShardedBackend, SimulationBackend,
                        Trainer, VmappedBackend, make_backend)
 from repro.comm.compression import make_compressor
 from repro.core import glasu
+from repro.fed import faults as faults_lib
 from repro.fed import simulation
 from repro.graph.prefetch import stack_rounds
 from repro.graph.sampler import GlasuSampler
@@ -364,6 +365,82 @@ def test_sharded_multi_round_shape_guard():
         jax.random.PRNGKey(0), jnp.arange(3))
     with pytest.raises(ValueError, match="rounds_per_step"):
         fn(params, opt.init(params), batches, keys)
+
+
+# -------------------------------------------------- fault-tolerant rows
+# Degraded-mode conformance: the fault-tolerant round path with the default
+# FaultConfig (every client present, zero latency, no drops) must match the
+# fault-free engine at the established tolerance classes. The weighted Agg
+# reduces algebraically to the plain mean at weight == 1, but its summation
+# order differs from the legacy reduction, so agreement is the same
+# float32-ULP class as the sharded rows — not bitwise.
+
+def _degraded_plans(n_clients, n):
+    return faults_lib.FaultSchedule(faults_lib.FaultConfig(),
+                                    n_clients).draw_step(n)
+
+
+def _run_f(backend, opt, params, rounds, keys, k, plans):
+    """_run with per-round fault plans threaded through run_step."""
+    p = jax.tree.map(jnp.array, params)
+    s = opt.init(p)
+    losses, per_round = [], []
+    for t in range(0, len(rounds), k):
+        out = backend.run_step(p, s,
+                               jax.tree.map(jnp.asarray,
+                                            stack_rounds(rounds[t:t + k])),
+                               keys[t:t + k], faults=plans[t:t + k])
+        p, s = out.params, out.opt_state
+        losses.append(np.asarray(out.losses))
+        per_round.extend(out.comm_bytes_rounds)
+    return p, np.concatenate(losses, axis=0), per_round
+
+
+@pytest.mark.parametrize("k", [1, pytest.param(4, marks=pytest.mark.slow)])
+@pytest.mark.parametrize("backbone,agg", MODEL_GRID)
+def test_degraded_fault_path_conforms_to_legacy_engine(backbone, agg, k):
+    cfg = _cfg(backbone, agg, faults={})        # default block = degraded
+    data, mcfg, sampler = _setup(cfg)
+    assert mcfg.fault_tolerant and not cfg.faults.active
+    mcfg_legacy = _cfg(backbone, agg).glasu_config(data)
+    opt = cfg.make_optimizer()
+    params = glasu.init_params(jax.random.PRNGKey(cfg.seed), mcfg)
+    rounds = _sample_rounds(sampler, ROUNDS)
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jax.random.PRNGKey(1), jnp.arange(ROUNDS))
+    plans = _degraded_plans(mcfg.n_clients, ROUNDS)
+    analytic = sampler.comm_bytes_per_joint_inference(mcfg.hidden, mcfg.agg)
+
+    vb0 = VmappedBackend()
+    vb0.bind(mcfg_legacy, opt, sampler)
+    p_ref, losses_ref, _ = _run(vb0, opt, params, rounds, keys, k)
+
+    vb = VmappedBackend()
+    vb.bind(mcfg, opt, sampler)
+    p_f, losses_f, per_round = _run_f(vb, opt, params, rounds, keys, k, plans)
+    # full participation: every delivered-only round prices the dense cost
+    assert per_round == [analytic] * ROUNDS
+    np.testing.assert_allclose(losses_f, losses_ref, **SHARD_TOL)
+    _assert_trees_close(p_f, p_ref, **SHARD_TOL)
+
+    sb = make_backend("sharded")
+    sb.bind(mcfg, opt, sampler)
+    p_sh, losses_sh, per_round_sh = _run_f(sb, opt, params, rounds, keys, k,
+                                           plans)
+    assert per_round_sh == per_round
+    np.testing.assert_allclose(losses_sh, losses_ref, **SHARD_TOL)
+    _assert_trees_close(p_sh, p_ref, **SHARD_TOL)
+
+    if agg == "mean":                   # simulation implements mean only
+        p_ref2, losses_ref2, _ = _run(vb0, opt, params, rounds[:2],
+                                      keys[:2], 1)
+        mb = SimulationBackend()
+        mb.bind(mcfg, opt, sampler)
+        p_sim, losses_sim, per_round_sim = _run_f(
+            mb, opt, params, rounds[:2], keys[:2], 1, plans[:2])
+        assert per_round_sim == per_round[:2]
+        np.testing.assert_allclose(losses_sim, losses_ref2, **SIM_TOL)
+        _assert_trees_close(p_sim, p_ref2, **SIM_TOL)
 
 
 # ------------------------------------------------ compressed exchange rows

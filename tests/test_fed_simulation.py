@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import glasu
 from repro.core.glasu import GlasuConfig
-from repro.fed.simulation import simulate_joint_inference
+from repro.fed.simulation import MessageLog, simulate_joint_inference
 from repro.graph.sampler import GlasuSampler, SamplerConfig
 from repro.graph.synth import make_vfl_dataset
 
@@ -53,3 +53,24 @@ def test_simulation_message_pattern():
     # K=1: exactly M uploads + M broadcasts, all at the final layer
     assert len(log.messages) == 2 * cfg.n_clients
     assert all(m.layer == 3 for m in log.messages)
+    # the fault-free path logs nothing dropped and carries zero timestamps
+    assert log.dropped_messages() == []
+    assert all(m.t == 0.0 for m in log.messages)
+
+
+def test_meter_excludes_dropped_messages_by_default():
+    """``total_bytes`` defaults to delivered-only: a lost or past-deadline
+    upload never reaches the server and must not count toward the audited
+    communication cost — ``delivered_only=False`` prices the sent traffic."""
+    log = MessageLog()
+    log.send_nbytes("client0", "server", "upload", 0, 100, t=3.0,
+                    dropped=True)
+    log.send_nbytes("client1", "server", "upload", 0, 100, t=5.0)
+    log.send_nbytes("server", "client0", "broadcast", 0, 40, t=9.0)
+    assert log.total_bytes() == 140
+    assert log.total_bytes("upload") == 100
+    assert log.total_bytes(delivered_only=False) == 240
+    assert log.total_bytes("upload", delivered_only=False) == 200
+    dropped = log.dropped_messages()
+    assert len(dropped) == 1 and dropped[0].sender == "client0"
+    assert dropped[0].t == 3.0

@@ -325,6 +325,61 @@ def test_gl011_all_exports_and_doc_references_exempt():
     assert not fired(init, "GL011", rel="src/repro/pkg/__init__.py")
 
 
+# ---------------------------------------------------------------- GL012
+def test_gl012_swallowed_exception_fires():
+    code = """
+    def f():
+        try:
+            risky()
+        except Exception:
+            pass
+
+    def g():
+        try:
+            risky()
+        except:
+            return {}
+    """
+    got = fired(code, "GL012", rel=COLD)
+    assert len(got) == 2
+    assert "swallows" in got[0].message
+    assert "bare `except:`" in got[1].message
+
+
+def test_gl012_clean_on_handled_exceptions():
+    code = """
+    import logging
+
+    def reraise():
+        try:
+            risky()
+        except Exception as e:
+            raise RuntimeError("ctx") from e
+
+    def logged():
+        try:
+            risky()
+        except Exception:
+            logging.warning("recoverable; continuing")
+
+    def propagated(q):
+        try:
+            risky()
+        except BaseException as e:
+            q.put(e)            # exception object forwarded, not dropped
+
+    def narrow():
+        try:
+            risky()
+        except (ValueError, KeyError):
+            return None         # narrow catch is deliberate handling
+    """
+    assert not fired(code, "GL012", rel=COLD)
+    # rule is scoped to src/ — the same swallow in tests/tools is fine
+    swallow = "try:\n    risky()\nexcept Exception:\n    pass\n"
+    assert not fired(swallow, "GL012", rel="tests/test_x.py")
+
+
 # ----------------------------------------------------- committed baseline
 def test_repo_lint_baseline_is_clean():
     """The whole point: src/ + tests/ carry zero unsuppressed findings."""

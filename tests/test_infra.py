@@ -23,6 +23,47 @@ def test_checkpoint_roundtrip(tmp_path):
                                       np.asarray(b, np.float32))
 
 
+def test_restore_missing_file_raises_filenotfound(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        checkpoint.restore(str(tmp_path), tree)
+    checkpoint.save(str(tmp_path), 1, tree)
+    # a step-aligned sidecar that was never written must fail loudly too,
+    # listing what exists — not fall back to zeros or the main ckpt
+    with pytest.raises(FileNotFoundError, match="comp"):
+        checkpoint.restore(str(tmp_path), tree, name="comp")
+
+
+@pytest.mark.parametrize("name", ["ckpt", "comp", "fault"])
+def test_restore_truncated_npz_raises_loud(tmp_path, name):
+    """A half-written file (killed mid-save) must raise RuntimeError naming
+    the file — the main checkpoint and every sidecar kind (EF accumulators,
+    the fault-tolerant stale-embedding cache) share the contract."""
+    from pathlib import Path
+    tree = {"x": jnp.arange(512, dtype=jnp.float32)}
+    fn = Path(checkpoint.save(str(tmp_path), 3, tree, name=name))
+    raw = fn.read_bytes()
+    fn.write_bytes(raw[:len(raw) // 2])
+    with pytest.raises(RuntimeError, match="corrupt checkpoint"):
+        checkpoint.restore(str(tmp_path), tree, step=3, name=name)
+
+
+def test_restore_garbled_npz_raises_loud(tmp_path):
+    from pathlib import Path
+    tree = {"x": jnp.zeros((4,))}
+    fn = Path(checkpoint.save(str(tmp_path), 2, tree))
+    fn.write_bytes(b"\x89not-a-zip" * 64)
+    with pytest.raises(RuntimeError, match="corrupt checkpoint"):
+        checkpoint.restore(str(tmp_path), tree)
+
+
+def test_restore_leaf_count_mismatch_raises_runtime(tmp_path):
+    checkpoint.save(str(tmp_path), 1, {"x": jnp.zeros((2,))})
+    like = {"x": jnp.zeros((2,)), "y": jnp.zeros((3,))}
+    with pytest.raises(RuntimeError, match="leaves"):
+        checkpoint.restore(str(tmp_path), like)
+
+
 def test_checkpoint_cleanup(tmp_path):
     tree = {"x": jnp.zeros((2,))}
     for s in range(5):

@@ -6,6 +6,7 @@ loss history, same comm-byte accounting — while compiling one round body
 and dispatching once per K rounds.
 """
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -348,6 +349,52 @@ def test_prefetch_close_mid_run_joins_worker():
     pf.get()                              # consume one, leave the rest
     pf.close()
     assert not pf._thread.is_alive()
+
+
+def test_prefetch_worker_error_while_consumer_blocked():
+    """A worker that dies MID-STREAM (after a successful step) must wake the
+    consumer blocked in get() with the error — not leave it deadlocked."""
+    _, _, sampler, _ = _setup()
+    real = sampler.sample_round
+    calls = []
+
+    def failing_round():
+        calls.append(1)
+        if len(calls) > 1:
+            time.sleep(0.2)         # let the consumer block in get() first
+            raise RuntimeError("boom mid-stream")
+        return real()
+
+    sampler.sample_round = failing_round
+    pf = PrefetchSampler(sampler, [1, 1], n_buffers=1)
+    try:
+        first = pf.get()
+        pf.retire(first, None)      # frees the generation -> worker refills
+        with pytest.raises(RuntimeError, match="prefetch worker failed"):
+            pf.get()
+    finally:
+        pf.close()
+    assert not pf._thread.is_alive()
+
+
+def test_prefetch_close_mid_fill_joins_promptly():
+    """close() while the worker is inside a long multi-round fill must cut
+    the fill at the next round boundary, not sample the whole step out."""
+    _, _, sampler, _ = _setup()
+    real = sampler.sample_round
+
+    def slow_round():
+        time.sleep(0.15)
+        return real()
+
+    sampler.sample_round = slow_round
+    pf = PrefetchSampler(sampler, [40], n_buffers=1)
+    time.sleep(0.4)                       # worker is a few rounds into the fill
+    t0 = time.monotonic()
+    pf.close()
+    assert not pf._thread.is_alive()
+    # a full fill is 40 * 0.15s = 6s; the stop-check exits within one round
+    assert time.monotonic() - t0 < 2.0
 
 
 # ------------------------------------------------------------- validation

@@ -530,11 +530,50 @@ def rule_gl011(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
     return out
 
 
+def rule_gl012(mod: ParsedModule, ctx: LintContext) -> List[Finding]:
+    """GL012 swallowed exception in ``src/``: a bare ``except:`` (or
+    ``except Exception/BaseException``) whose body neither re-raises, nor
+    logs/prints, nor *uses* the bound exception (propagating it into a
+    queue/future counts as handling). A silent catch-all turned a corrupt
+    checkpoint into a quiet cold start once; the fault-tolerant runtime
+    (docs/FAULTS.md) depends on failures being loud. Handlers that must
+    stay silent by design carry a reasoned suppression."""
+    if not mod.rel.startswith("src/"):
+        return []
+    out = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        t = node.type
+        if t is not None:
+            name = _dotted(t)
+            if name.split(".")[-1] not in ("Exception", "BaseException"):
+                continue            # narrow catch: fine
+        handled = False
+        for sub in ast.walk(ast.Module(body=node.body, type_ignores=[])):
+            if isinstance(sub, ast.Raise):
+                handled = True      # re-raise (incl. `raise X from e`)
+            elif isinstance(sub, ast.Name) and sub.id == node.name:
+                handled = True      # exception object used: propagated
+            elif isinstance(sub, ast.Call):
+                leaf = _dotted(sub.func).split(".")[-1].lower()
+                if "log" in leaf or "warn" in leaf or leaf == "print":
+                    handled = True  # at least surfaced
+        if not handled:
+            what = "bare `except:`" if t is None else f"`except {_dotted(t)}`"
+            out.append(Finding(
+                "GL012", mod.rel, node.lineno,
+                f"{what} swallows the exception — re-raise, log, or "
+                f"propagate it (or narrow the catch); silent catch-alls "
+                f"hide real faults (see docs/FAULTS.md)"))
+    return out
+
+
 RULES: Dict[str, Callable] = {
     "GL001": rule_gl001, "GL002": rule_gl002, "GL003": rule_gl003,
     "GL004": rule_gl004, "GL005": rule_gl005, "GL006": rule_gl006,
     "GL007": rule_gl007, "GL008": rule_gl008, "GL009": rule_gl009,
-    "GL010": rule_gl010, "GL011": rule_gl011,
+    "GL010": rule_gl010, "GL011": rule_gl011, "GL012": rule_gl012,
 }
 
 SHORT = {
@@ -544,6 +583,7 @@ SHORT = {
     "GL006": "pallas-grid-divisibility", "GL007": "blockspec-memory-space",
     "GL008": "mutable-default-arg", "GL009": "unseeded-rng",
     "GL010": "dead-module", "GL011": "unused-import",
+    "GL012": "swallowed-exception",
 }
 
 
