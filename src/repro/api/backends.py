@@ -58,9 +58,20 @@ class StepResult:
 
 @runtime_checkable
 class Backend(Protocol):
-    """Execution substrate for one GLASU round (Alg 1 body)."""
+    """Execution substrate for one GLASU round (Alg 1 body).
+
+    ``supports_faults`` is the explicit fault-capability contract: a
+    backend that can run deadline rounds (accepting ``faults=`` on
+    run_round/run_step) declares it ``True``. The Trainer checks the flag
+    at CONFIG time — a fault-tolerant experiment on a backend without it
+    fails loudly before the first round instead of silently training
+    fault-free (all three built-in backends support faults; the flag
+    exists for external/older backends written against the run_round-only
+    protocol).
+    """
 
     name: str
+    supports_faults: bool
 
     def bind(self, model_cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
              sampler: GlasuSampler) -> None:
@@ -97,12 +108,24 @@ def run_step_sequential(backend, params, opt_state, batches: SampledBatch,
     letting ``CommMeterHook`` mis-accumulate — EXCEPT under ``faults``
     (K ``RoundPlan``s), where per-round delivered bytes legitimately vary
     with the draw and ride in ``comm_bytes_rounds``.
+
+    Fault contract: ``faults=`` is forwarded only to backends that declare
+    ``supports_faults`` — a plan handed to a backend without the flag
+    raises here rather than vanishing into a ``**kwargs`` sink (the
+    Trainer already rejects that pairing at config time; this guard covers
+    direct callers).
     """
+    if faults is not None and not getattr(backend, "supports_faults", False):
+        raise ValueError(
+            f"backend {getattr(backend, 'name', type(backend).__name__)!r} "
+            "does not declare supports_faults; it cannot run the "
+            "fault-tolerant exchange (the plans would be dropped and the "
+            "run would silently train fault-free)")
     losses, logs, per_round = [], [], []
     comm = None
     for i in range(len(keys)):
-        # only pass faults= when a plan is active: backends written against
-        # the older run_round-only protocol don't accept the kwarg
+        # faults= is omitted when no plan is active so run_round-only
+        # backends (supports_faults declared or not) keep working fault-free
         kw = {} if faults is None else {"faults": faults[i]}
         out = backend.run_round(params, opt_state,
                                 unstack_round(batches, i), keys[i], **kw)
@@ -170,10 +193,15 @@ class VmappedBackend:
     With ``model_cfg.compression`` active the backend owns the
     error-feedback carry (``self.comp_state``): it is threaded (and
     donated) through every round/step alongside the optimizer state, and
-    the Trainer checkpoints/restores it via the backend attribute.
+    the Trainer checkpoints/restores it via the backend attribute. The
+    fault-tolerant stale-embedding cache (``self.fault_state``) is owned
+    the same way; composed binds (faults + compression) thread both
+    carries in the unified engine's ``(params, opt_state, comp_state,
+    fault_state, ...)`` order.
     """
 
     name = "vmapped"
+    supports_faults = True
 
     def bind(self, model_cfg, optimizer, sampler):
         self.cfg = model_cfg
@@ -200,9 +228,15 @@ class VmappedBackend:
         if self._round_fn is None:
             self._round_fn = glasu.make_round_fn(self.cfg, self.optimizer)
         if self.fault_state is not None:
-            params, opt_state, self.fault_state, losses = self._round_fn(
-                params, opt_state, self.fault_state, batch, key,
-                _round_faults(faults))
+            masks = _round_faults(faults)
+            if self.compressor is not None:
+                (params, opt_state, self.comp_state, self.fault_state,
+                 losses) = self._round_fn(params, opt_state, self.comp_state,
+                                          self.fault_state, batch, key,
+                                          masks)
+            else:
+                params, opt_state, self.fault_state, losses = self._round_fn(
+                    params, opt_state, self.fault_state, batch, key, masks)
             return RoundResult(params, opt_state, losses,
                                self._fault_bytes(faults))
         if self.compressor is None:
@@ -219,8 +253,15 @@ class VmappedBackend:
             present, weight = faults_lib.stack_plans(faults)
             masks = glasu.RoundFaults(jnp.asarray(present),
                                       jnp.asarray(weight))
-            params, opt_state, self.fault_state, losses = self.step_fn(
-                params, opt_state, self.fault_state, batches, keys, masks)
+            if self.compressor is not None:
+                (params, opt_state, self.comp_state, self.fault_state,
+                 losses) = self.step_fn(params, opt_state, self.comp_state,
+                                        self.fault_state, batches, keys,
+                                        masks)
+            else:
+                params, opt_state, self.fault_state, losses = self.step_fn(
+                    params, opt_state, self.fault_state, batches, keys,
+                    masks)
             return StepResult(params, opt_state, losses, self.bytes_per_round,
                               comm_bytes_rounds=tuple(
                                   self._fault_bytes(p) for p in faults))
@@ -241,6 +282,7 @@ class SimulationBackend:
     """Explicit message-passing path; audits the meter against the log."""
 
     name = "simulation"
+    supports_faults = True
 
     def bind(self, model_cfg, optimizer, sampler):
         if model_cfg.agg != "mean":
@@ -264,14 +306,24 @@ class SimulationBackend:
     def run_round(self, params, opt_state, batch, key, faults=None):
         _check_fault_args(self.cfg, self.fault_state, faults)
         if self.fault_state is not None:
-            params, opt_state, losses, log, self.fault_state = \
-                simulation.simulate_fault_round(params, opt_state, batch,
-                                                self.cfg, self.optimizer,
-                                                self.fault_state, faults)
+            if self.compressor is not None:
+                (params, opt_state, losses, log, self.fault_state,
+                 self.comp_state) = simulation.simulate_fault_round(
+                    params, opt_state, batch, self.cfg, self.optimizer,
+                    self.fault_state, faults, compressor=self.compressor,
+                    comp_state=self.comp_state)
+            else:
+                params, opt_state, losses, log, self.fault_state = \
+                    simulation.simulate_fault_round(params, opt_state, batch,
+                                                    self.cfg, self.optimizer,
+                                                    self.fault_state, faults)
             # delivered-only audit: the log minus dropped messages must
-            # price exactly as the analytic model with n_present uploads
+            # price exactly as the analytic model with n_present uploads —
+            # compressed payloads priced at their wire size for present
+            # clients only
             measured = log.total_bytes(delivered_only=True)
             expected = _analytic_bytes(self.cfg, self.sampler,
+                                       compressor=self.compressor,
                                        n_uploads=faults.n_present)
             if measured != expected:
                 raise RuntimeError(
@@ -326,6 +378,7 @@ class ShardedBackend:
     """
 
     name = "sharded"
+    supports_faults = True
 
     def __init__(self, mesh=None, mesh_devices: Optional[int] = None):
         self._mesh = mesh
@@ -366,9 +419,14 @@ class ShardedBackend:
             shd.tree_shardings(
                 shd.client_comp_state_specs(self.comp_state, self.mesh),
                 self.mesh)
+        # composed with compression the cache holds the server's decoded
+        # view, recomputed on every device from the gathered payload —
+        # replicated, not client-sharded
         self.fault_sh = None if self.fault_state is None else \
             shd.tree_shardings(
-                shd.client_fault_state_specs(self.fault_state, self.mesh),
+                shd.client_fault_state_specs(
+                    self.fault_state, self.mesh,
+                    replicated=self.compressor is not None),
                 self.mesh)
 
         # byte meter: record the aggregation collectives from an abstract
@@ -385,8 +443,14 @@ class ShardedBackend:
         if self.fault_state is not None:
             ones = glasu.RoundFaults(jnp.ones(model_cfg.n_clients),
                                      jnp.ones(model_cfg.n_clients))
-            jax.eval_shape(trace_fn, params_abs, opt_abs, self.fault_state,
-                           shell, jax.random.PRNGKey(0), ones)
+            if self.compressor is not None:
+                jax.eval_shape(trace_fn, params_abs, opt_abs,
+                               self.comp_state, self.fault_state, shell,
+                               jax.random.PRNGKey(0), ones)
+            else:
+                jax.eval_shape(trace_fn, params_abs, opt_abs,
+                               self.fault_state, shell,
+                               jax.random.PRNGKey(0), ones)
         elif self.compressor is None:
             jax.eval_shape(trace_fn, params_abs, opt_abs, shell,
                            jax.random.PRNGKey(0))
@@ -460,9 +524,16 @@ class ShardedBackend:
         params, opt_state = self._place(params, opt_state)
         batch = self._place_batch(batch, round_stacked=False)
         if self.fault_state is not None:
-            params, opt_state, self.fault_state, losses = self._round_fn(
-                params, opt_state, self._placed_fault_state(), batch, key,
-                _round_faults(faults))
+            if self.compressor is not None:
+                (params, opt_state, self.comp_state, self.fault_state,
+                 losses) = self._round_fn(
+                    params, opt_state, self._placed_comp_state(),
+                    self._placed_fault_state(), batch, key,
+                    _round_faults(faults))
+            else:
+                params, opt_state, self.fault_state, losses = self._round_fn(
+                    params, opt_state, self._placed_fault_state(), batch, key,
+                    _round_faults(faults))
             return RoundResult(params, opt_state, losses,
                                self._fault_bytes(faults))
         if self.compressor is None:
@@ -481,9 +552,15 @@ class ShardedBackend:
             present, weight = faults_lib.stack_plans(faults)
             masks = glasu.RoundFaults(jnp.asarray(present),
                                       jnp.asarray(weight))
-            params, opt_state, self.fault_state, losses = self.step_fn(
-                params, opt_state, self._placed_fault_state(), batches,
-                keys, masks)
+            if self.compressor is not None:
+                (params, opt_state, self.comp_state, self.fault_state,
+                 losses) = self.step_fn(
+                    params, opt_state, self._placed_comp_state(),
+                    self._placed_fault_state(), batches, keys, masks)
+            else:
+                params, opt_state, self.fault_state, losses = self.step_fn(
+                    params, opt_state, self._placed_fault_state(), batches,
+                    keys, masks)
             return StepResult(params, opt_state, losses, self.bytes_per_round,
                               comm_bytes_rounds=tuple(
                                   self._fault_bytes(p) for p in faults))

@@ -171,11 +171,10 @@ class ExperimentConfig:
             err(f"faults must be a FaultConfig or dict, got "
                 f"{type(self.faults).__name__}")
         if self.faults is not None:
-            if self.compression is not None and self.compression.active:
-                err("fault tolerance and wire compression are mutually "
-                    "exclusive: the stale-cache substitution would have to "
-                    "cache dequantized uploads while EF accumulates against "
-                    "exact ones — disable one of faults / compression")
+            # faults × compression compose since the round engines were
+            # unified: the server caches each client's last DELIVERED
+            # decoded block and EF accumulators freeze for rounds a client
+            # never transmitted (core.glasu._compressed_aggregate)
             if self.secure_agg or self.dp_sigma > 0.0:
                 err("fault tolerance is incompatible with the §3.6 privacy "
                     "hooks: pairwise masks and per-round DP noise assume "

@@ -416,6 +416,15 @@ class Trainer:
         # host-side fault schedule (None for fault-free runs): the Trainer
         # owns the sequential draw; backends only ever see per-round plans
         self.fault_sched = make_schedule(cfg.faults, self.model_cfg.n_clients)
+        if self.fault_sched is not None and \
+                not getattr(self.backend, "supports_faults", False):
+            # fail at config time: a backend without the fault contract
+            # would otherwise silently train fault-free (the faults kwarg
+            # only reaches backends through the run_round/run_step protocol)
+            raise ValueError(
+                f"backend {self.backend.name!r} does not support the "
+                "fault-tolerance protocol (supports_faults); drop the "
+                "faults block or pick a fault-capable backend")
         self.hooks: List[Hook] = [CommMeterHook()]
         if self.fault_sched is not None:
             self.hooks.append(ParticipationHook())

@@ -68,9 +68,6 @@ class GlasuConfig:
             assert self.agg_layers, \
                 "fault tolerance shapes the aggregation exchange; a " \
                 "standalone run has nothing to be tolerant about"
-            assert self.compression is None or not self.compression.active, \
-                "the fault-tolerant exchange is uncompressed (cached blocks " \
-                "would double-decode); disable one of compression / faults"
             assert not self.secure_agg and self.dp_sigma == 0.0, \
                 "the §3.6 privacy hooks assume every round's uploads are " \
                 "fresh; cached substitutes break mask cancellation / the " \
@@ -246,7 +243,8 @@ def _payload_msg_bytes(payload, lead_dims: int) -> int:
 
 def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
                           key=None, *, gather=None, i0=0, record=None,
-                          layer: int = -1):
+                          layer: int = -1, cache_l=None,
+                          faults: Optional["RoundFaults"] = None):
     """Server Agg (§3.1) with wire compression on both exchange legs.
 
     ``h_plus``: ``(m_blk, n, h)`` fresh client uploads — the full client
@@ -267,10 +265,23 @@ def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
          Agg(H_{-m}, H_m^+) — its exact fresh block plus the compressed
          view of everyone else.
 
-    Returns ``(h, stale, new_ef_l)`` with ``h``/``stale`` of shape
-    ``(m_blk, n, h_agg)`` and ``new_ef_l`` ``None`` iff ``ef_l`` was.
-    Decode is elementwise per row, so slicing the decoded global stack
-    equals decoding the local payload — the local EF update relies on it.
+    Composed fault-tolerant mode (``cache_l``/``faults`` given): the server
+    keeps a cache of each client's last DELIVERED **decoded** block and
+    substitutes it for absent clients, then aggregates with the round's
+    participation weights (the same weighted mean as ``_fault_agg_math``,
+    on dequantized values). Error feedback is slot-keyed per client and
+    updated ONLY for clients whose upload was delivered this round — an
+    absent client's residual is frozen, not decayed: it never transmitted,
+    so there is nothing new to account for. ``cache_l`` is the full
+    ``(M, n, h)`` decoded server view (replicated under ``shard_map``;
+    every device recomputes it from the gathered payload).
+
+    Returns ``(h, stale, new_ef_l, new_cache_l, denom)`` with ``h``/
+    ``stale`` of shape ``(m_blk, n, h_agg)``; ``new_ef_l`` is ``None`` iff
+    ``ef_l`` was, and ``new_cache_l``/``denom`` are ``None`` outside the
+    composed mode. Decode is elementwise per row, so slicing the decoded
+    global stack equals decoding the local payload — the local EF update
+    relies on it.
     """
     m = cfg.n_clients
     m_blk = h_plus.shape[0]
@@ -291,17 +302,46 @@ def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
     up_hat = comp.decode(wire, h_plus.shape[-1])        # (M, n, h) at server
     up_hat_blk = up_hat if m_blk == m else \
         jax.lax.dynamic_slice_in_dim(up_hat, i0, m_blk, axis=0)
-    # the carried residual is decayed: accumulators are slot-keyed while
-    # the sampled node set changes every round (not true per-node EF) —
-    # see CompressionConfig.ef_decay for why undecayed carry destabilizes
-    new_ef_up = None if ef_up is None else \
-        comp.ef_decay * (up_in - up_hat_blk)
-
     n, h = up_hat.shape[1], up_hat.shape[2]
-    if cfg.agg == "mean":
-        agg = jnp.mean(up_hat, axis=0)                  # (n, h)
+
+    if faults is None:
+        # the carried residual is decayed: accumulators are slot-keyed
+        # while the sampled node set changes every round (not true
+        # per-node EF) — see CompressionConfig.ef_decay for why undecayed
+        # carry destabilizes
+        new_ef_up = None if ef_up is None else \
+            comp.ef_decay * (up_in - up_hat_blk)
+        new_cache_l = denom = None
+        eff_blk = up_hat_blk
+        w_blk = None
+        if cfg.agg == "mean":
+            agg = jnp.mean(up_hat, axis=0)              # (n, h)
+        else:
+            agg = jnp.transpose(up_hat, (1, 0, 2)).reshape(n, m * h)
     else:
-        agg = jnp.transpose(up_hat, (1, 0, 2)).reshape(n, m * h)
+        p_blk = faults.present if m_blk == m else \
+            jax.lax.dynamic_slice_in_dim(faults.present, i0, m_blk, axis=0)
+        # absent clients never transmitted: their residual is frozen
+        new_ef_up = None if ef_up is None else jnp.where(
+            p_blk[:, None, None] > 0,
+            comp.ef_decay * (up_in - up_hat_blk), ef_up)
+        # server view: decoded fresh block where delivered, cache elsewhere
+        eff = jnp.where(faults.present[:, None, None] > 0, up_hat, cache_l)
+        new_cache_l = eff
+        eff_blk = eff if m_blk == m else \
+            jax.lax.dynamic_slice_in_dim(eff, i0, m_blk, axis=0)
+        w = faults.weight[:, None, None].astype(up_hat.dtype)
+        w_blk = faults.weight if m_blk == m else \
+            jax.lax.dynamic_slice_in_dim(faults.weight, i0, m_blk, axis=0)
+        w_blk = w_blk.astype(up_hat.dtype)
+        if cfg.agg == "mean":
+            denom = jnp.maximum(jnp.sum(faults.weight),
+                                1.0).astype(up_hat.dtype)
+            agg = jnp.sum(w * eff, axis=0) / denom      # (n, h)
+        else:
+            denom = jnp.asarray(1.0, up_hat.dtype)
+            agg = jnp.transpose(w * eff, (1, 0, 2)).reshape(n, m * h)
+
     ef_down = ef_l["down"] if ef_l is not None else None
     down_payload, down_hat, new_ef_down = compression.roundtrip_with_ef(
         comp, agg, ef_down)                             # server -> clients
@@ -315,7 +355,10 @@ def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
             down_bytes=_payload_msg_bytes(down_payload, 0)))
 
     if cfg.agg == "mean":
-        stale = down_hat[None] - up_hat_blk / m         # Extract per client
+        if faults is None:
+            stale = down_hat[None] - eff_blk / m        # Extract per client
+        else:
+            stale = down_hat[None] - w_blk[:, None, None] * eff_blk / denom
     else:
         own_block = jnp.eye(m, dtype=h_plus.dtype)
         blockmask = jnp.repeat(1.0 - own_block, h, axis=1)   # (M, M*h)
@@ -324,11 +367,17 @@ def _compressed_aggregate(cfg: GlasuConfig, comp: Compressor, h_plus, ef_l,
                                                      axis=0)
         stale = down_hat[None] * blockmask[:, None, :]
     g_idx = i0 + jnp.arange(m_blk)
-    h_out = jax.vmap(lambda s, hp, g: _combine_with_stale(cfg, s, hp, g))(
-        stale, h_plus, g_idx)
+    if faults is None:
+        h_out = jax.vmap(lambda s, hp, g: _combine_with_stale(cfg, s, hp, g))(
+            stale, h_plus, g_idx)
+    else:
+        h_out = jax.vmap(
+            lambda s, hp, g, wm: _combine_with_stale(cfg, s, hp, g, w=wm,
+                                                     denom=denom))(
+            stale, h_plus, g_idx, w_blk)
     new_ef_l = None if ef_l is None else {"up": new_ef_up,
                                           "down": new_ef_down}
-    return h_out, stale, new_ef_l
+    return h_out, stale, new_ef_l, new_cache_l, denom
 
 
 # ------------------------------------------------- fault-tolerant exchange
@@ -389,14 +438,151 @@ def _fault_agg_math(cfg: GlasuConfig, uploads, weight):
     return jnp.broadcast_to(agg[None], (m, n, m * h)), stale, denom
 
 
-def _fault_aggregate(cfg: GlasuConfig, h_plus, cache_l, faults: RoundFaults):
-    """Deadline-round server Agg: aggregate what arrived, substitute the
-    staleness-bounded cache for every absent client (weight excludes
-    aged-out blocks). Returns ``(h, stale, new_cache, denom)``."""
-    p = faults.present[:, None, None]
-    uploads = jnp.where(p > 0, h_plus, cache_l)   # fresh where delivered
-    h, stale, denom = _fault_agg_math(cfg, uploads, faults.weight)
-    return h, stale, uploads, denom
+# -------------------------------------------------------- execution policy
+class ExecPolicy(NamedTuple):
+    """How one GLASU round executes — the three orthogonal axes the paper's
+    round is invariant to, captured once so a single round body serves
+    every builder:
+
+      * aggregation transport: vmapped client stack (``axis_name=None``) vs
+        per-device client blocks gathered with ``all_gather`` under
+        ``shard_map`` (``axis_name``/``m_loc`` set);
+      * exchange codec: identity (``compressor=None``) vs the PR-5 wire
+        compressor at the Agg boundary;
+      * participation: all-present vs deadline-round ``RoundPlan`` masks
+        with the stale-embedding cache (``fault_tolerant``).
+
+    ``record`` is the trace-time :class:`CollectiveRecord` hook of the
+    byte meter. The policy is static Python state closed over at build
+    time — it never crosses a jit boundary.
+    """
+    axis_name: Optional[str] = None   # None = vmapped; else shard_map axis
+    m_loc: int = 0                    # clients per device (sharded only)
+    compressor: Optional[Compressor] = None
+    fault_tolerant: bool = False
+    record: Any = None
+
+    @property
+    def sharded(self) -> bool:
+        return self.axis_name is not None
+
+
+def _policy(cfg: GlasuConfig, axis_name: Optional[str] = None,
+            m_loc: int = 0, record=None) -> ExecPolicy:
+    """Resolve ``cfg``'s codec/participation axes into an ExecPolicy."""
+    return ExecPolicy(axis_name=axis_name, m_loc=m_loc,
+                      compressor=compression.make_compressor(cfg.compression),
+                      fault_tolerant=cfg.fault_tolerant, record=record)
+
+
+def _policy_arity(pol: ExecPolicy):
+    """Which carries the round threads: (error-feedback, fault-cache).
+    Determines the builder signatures — each active carry adds one leading
+    state argument and one result, and faults append a mask argument."""
+    return pol.compressor is not None, pol.fault_tolerant
+
+
+def _record_dense(record, l: int, uploads, h_full):
+    """Byte-meter record for an UNCOMPRESSED aggregation collective: wire
+    size is the dense (n, h) block per message on both legs."""
+    isz = jnp.dtype(uploads.dtype).itemsize
+    record(CollectiveRecord(
+        layer=l, n_clients=uploads.shape[0], n_rows=uploads.shape[1],
+        width_up=uploads.shape[2], width_down=h_full.shape[-1],
+        itemsize=isz,
+        up_bytes=uploads.shape[1] * uploads.shape[2] * isz,
+        down_bytes=uploads.shape[1] * h_full.shape[-1] * isz))
+
+
+def _slice_block(pol: ExecPolicy, x, i0):
+    """Device-local client block of a global (M, ...) stack; identity on
+    the vmapped path where the block IS the full stack."""
+    if not pol.sharded:
+        return x
+    return jax.lax.dynamic_slice_in_dim(x, i0, pol.m_loc, axis=0)
+
+
+def _joint_inference_engine(params, batch: SampledBatch, cfg: GlasuConfig,
+                            pol: ExecPolicy, key=None, comp_state=None,
+                            fault_state=None,
+                            faults: Optional[RoundFaults] = None):
+    """Alg 3 (JointInference with Extract) under any :class:`ExecPolicy`.
+
+    THE round-forward body — every public entry (``joint_inference``,
+    ``fault_joint_inference``, ``sharded_joint_inference``) and every
+    builder instantiates this one function; the policy only selects the
+    transport (local stack vs gather), the codec (identity vs compressed
+    exchange) and the participation rule (all-present vs masked with the
+    stale-embedding cache).
+
+    ``params``/``batch`` leaves carry the full client stack on the vmapped
+    path and the device-local block under ``shard_map``; ``key``,
+    ``faults`` and (with compression) the fault cache are replicated.
+
+    Returns ``(logits, stale, new_comp_state, new_fault_state, denom)``;
+    the two carries are ``{}`` when their axis is off, ``denom`` is the
+    weighted-mean denominator of the fault aggregation (dtype-cast to the
+    uploads exactly once, in ``_fault_agg_math`` /
+    ``_compressed_aggregate`` — the vmapped/sharded drift this engine
+    retired) and M when faults are off.
+    """
+    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"],
+                                                   batch.feats)
+    h0 = h
+    stale: Dict[int, Any] = {}
+    new_comp: Dict[int, Any] = {}
+    new_cache: Dict[int, Any] = {}
+    denom = jnp.asarray(cfg.n_clients, jnp.float32)
+    i0 = jax.lax.axis_index(pol.axis_name) * pol.m_loc if pol.sharded else 0
+    gather = (lambda x: _gather_clients(x, pol.axis_name)) if pol.sharded \
+        else None
+    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
+        layer = _client_layer(cfg, l)
+        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
+                                 batch.gather_idx[l], batch.gather_mask[l])
+        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
+        if l not in cfg.agg_layers:
+            h = h_plus
+            continue
+        # fault rounds never consume the key: the §3.6 privacy hooks are
+        # config-excluded with faults and the legacy fault engines never
+        # folded it (trace identity for the golden rows)
+        subkey = jax.random.fold_in(key, l) \
+            if key is not None and not pol.fault_tolerant else None
+        if pol.compressor is not None:
+            ef_l = comp_state.get(l) if comp_state else None
+            cache_l = fault_state[l] if pol.fault_tolerant else None
+            h, stale[l], new_ef, cache, d = _compressed_aggregate(
+                cfg, pol.compressor, h_plus, ef_l, subkey, gather=gather,
+                i0=i0, record=pol.record, layer=l, cache_l=cache_l,
+                faults=faults)
+            if new_ef is not None:
+                new_comp[l] = new_ef
+            if pol.fault_tolerant:
+                new_cache[l] = cache
+                denom = d
+        elif pol.fault_tolerant:
+            # fresh where delivered, staleness-bounded cache elsewhere
+            p_blk = _slice_block(pol, faults.present, i0)
+            eff_blk = jnp.where(p_blk[:, None, None] > 0, h_plus,
+                                fault_state[l])
+            new_cache[l] = eff_blk
+            uploads = eff_blk if gather is None else gather(eff_blk)
+            h_full, stale_full, denom = _fault_agg_math(cfg, uploads,
+                                                        faults.weight)
+            if pol.record is not None:
+                _record_dense(pol.record, l, uploads, h_full)
+            h = _slice_block(pol, h_full, i0)
+            stale[l] = _slice_block(pol, stale_full, i0)
+        else:
+            uploads = h_plus if gather is None else gather(h_plus)
+            h_full, stale_full = _aggregate(cfg, uploads, subkey)
+            if pol.record is not None:
+                _record_dense(pol.record, l, uploads, h_full)
+            h = _slice_block(pol, h_full, i0)
+            stale[l] = _slice_block(pol, stale_full, i0)
+    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    return logits, stale, new_comp, new_cache, denom
 
 
 def fault_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
@@ -410,23 +596,9 @@ def fault_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     ``(logits, stale, new_fault_state, denom)`` — the refreshed cache is
     threaded through the round carry next to the optimizer state.
     """
-    feats = batch.feats
-    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
-    h0 = h
-    stale: Dict[int, Any] = {}
-    new_cache: Dict[int, Any] = {}
-    denom = jnp.asarray(cfg.n_clients, jnp.float32)
-    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
-        layer = _client_layer(cfg, l)
-        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
-                                 batch.gather_idx[l], batch.gather_mask[l])
-        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
-        if l in cfg.agg_layers:
-            h, stale[l], new_cache[l], denom = _fault_aggregate(
-                cfg, h_plus, fault_state[l], faults)
-        else:
-            h = h_plus
-    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    logits, stale, _, new_cache, denom = _joint_inference_engine(
+        params, batch, cfg, ExecPolicy(fault_tolerant=True),
+        fault_state=fault_state, faults=faults)
     return logits, stale, new_cache, denom
 
 
@@ -481,29 +653,9 @@ def joint_inference(params, batch: SampledBatch, cfg: GlasuConfig, key=None,
     probe model math (``Backend.joint_logits``) pass no compressor and get
     the exact uncompressed forward.
     """
-    feats = batch.feats
-    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], feats)
-    h0 = h
-    stale: Dict[int, Any] = {}
-    new_state: Dict[int, Any] = {}
-    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
-        layer = _client_layer(cfg, l)
-        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
-                                 batch.gather_idx[l], batch.gather_mask[l])
-        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
-        if l in cfg.agg_layers:
-            subkey = jax.random.fold_in(key, l) if key is not None else None
-            if compressor is None:
-                h, stale[l] = _aggregate(cfg, h_plus, subkey)
-            else:
-                ef_l = comp_state.get(l) if comp_state else None
-                h, stale[l], new_ef = _compressed_aggregate(
-                    cfg, compressor, h_plus, ef_l, subkey, layer=l)
-                if new_ef is not None:
-                    new_state[l] = new_ef
-        else:
-            h = h_plus
-    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
+    logits, stale, new_state, _, _ = _joint_inference_engine(
+        params, batch, cfg, ExecPolicy(compressor=compressor), key=key,
+        comp_state=comp_state)
     if compressor is None:
         return logits, stale
     return logits, stale, new_state
@@ -542,29 +694,45 @@ def label_owner_grad(params, batch: SampledBatch, stale, cfg: GlasuConfig):
 
 def local_update_steps(params, opt_state, batch: SampledBatch, stale,
                        cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
-                       g_hl=None, fault_w=None, fault_denom=None):
+                       g_hl=None, fault_w=None, fault_denom=None,
+                       axis_name: Optional[str] = None, m_loc: int = 0):
     """Q iterations of Alg 4 under ``lax.scan`` (same mini-batch, stale H_{-m}).
 
     With ``labels_at_client`` set (Appendix B.2, Alg 7): only the owner
     evaluates the real loss; every other client trains on the surrogate
     <g_HL, H_m[L]> whose gradient equals the chain-rule product in eq. (3).
 
-    On a fault-tolerant round ``fault_w`` is the (M,) participation-weight
+    On a fault-tolerant round ``fault_w`` is the participation-weight
     vector and ``fault_denom`` the weighted-mean denominator: each client
     combines its fresh block at the weight the server aggregated it with
     (Alg 4's stale-others + fresh-own structure, weighted).
+
+    With ``axis_name``/``m_loc`` set (shard_map), every stacked input —
+    params, opt state, batch, stale buffers, ``fault_w`` — holds the LOCAL
+    client block. The update itself is device-local (the stale buffers
+    already hold H_{-m}, so no communication — exactly the paper's
+    client-side phase); only the reported mean loss crosses devices (an
+    all_gather of Q scalars per round; diagnostics, not algorithm traffic,
+    hence unmetered). Clients pass their GLOBAL index to the combine,
+    which concat aggregation needs for own-block placement.
     """
     labels = batch.labels
-    m_ids = jnp.arange(cfg.n_clients)
+    sharded = axis_name is not None
+    m_ids = jnp.arange(m_loc if sharded else cfg.n_clients)
+    m_global = jax.lax.axis_index(axis_name) * m_loc + m_ids if sharded \
+        else None
 
     def one_step(carry, _):
         p, s = carry
 
-        def per_client(params_m, feats_m, stale_m, m_index, w_m=None):
+        def per_client(params_m, feats_m, stale_m, m_index, *extra):
+            extra = list(extra)
+            g_index = extra.pop(0) if sharded else None
+            w_m = extra.pop(0) if fault_w is not None else None
             if cfg.labels_at_client is None:
                 return client_loss(params_m, feats_m, batch, stale_m, labels,
-                                   cfg, m_index, fault_w=w_m,
-                                   fault_denom=fault_denom)
+                                   cfg, m_index, global_index=g_index,
+                                   fault_w=w_m, fault_denom=fault_denom)
             own = client_loss(params_m, feats_m, batch, stale_m, labels,
                               cfg, m_index)
             h_l = _client_trunk(cfg, params_m, feats_m, batch, m_index,
@@ -575,49 +743,57 @@ def local_update_steps(params, opt_state, batch: SampledBatch, stale,
             # broadcast-gradient surrogate (they own no classifier grads)
             return jnp.where(is_owner, own, surrogate)
 
-        if fault_w is None:
-            loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                                   in_axes=(0, 0, 0, 0))(p, batch.feats,
-                                                         stale, m_ids)
-        else:
-            loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                                   in_axes=(0, 0, 0, 0, 0))(
-                p, batch.feats, stale, m_ids, fault_w)
+        args = [p, batch.feats, stale, m_ids]
+        if sharded:
+            args.append(m_global)
+        if fault_w is not None:
+            args.append(fault_w)
+        loss, grads = jax.vmap(jax.value_and_grad(per_client),
+                               in_axes=(0,) * len(args))(*args)
         updates, s = optimizer.update(grads, s, p)
         p = opt_lib.apply_updates(p, updates)
-        return (p, s), jnp.mean(loss)
+        # sharded: gather to the global (M,) loss row so the reported mean
+        # is the same reduction as the vmapped path's mean over all clients
+        round_loss = jnp.mean(_gather_clients(loss, axis_name)) if sharded \
+            else jnp.mean(loss)
+        return (p, s), round_loss
 
     (params, opt_state), losses = jax.lax.scan(
         one_step, (params, opt_state), None, length=cfg.n_local_steps)
     return params, opt_state, losses
 
 
-def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer, params,
-                opt_state, batch: SampledBatch, key,
-                compressor: Optional[Compressor] = None, comp_state=None,
-                fault_state=None, faults: Optional[RoundFaults] = None):
+def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                pol: ExecPolicy, params, opt_state, batch: SampledBatch,
+                key, comp_state=None, fault_state=None,
+                faults: Optional[RoundFaults] = None):
     """One GLASU round (Alg 1 body): JointInference + Q LocalUpdates.
 
-    With a compressor, the JointInference exchange runs compressed and the
-    error-feedback carry is threaded: returns a 4-tuple
-    ``(params, opt_state, comp_state, losses)`` instead of the legacy 3.
-    With ``fault_state``/``faults`` (fault-tolerant rounds; exclusive with
-    compression) the stale-cache carry is threaded the same way: returns
-    ``(params, opt_state, fault_state, losses)``.
+    THE round body — the only one. Every builder (vmapped / sharded ×
+    single / multi-round × any carry combination) instantiates this
+    function with its :class:`ExecPolicy`; there is no second copy to
+    hand-sync. Always returns the full 5-tuple ``(params, opt_state,
+    comp_state, fault_state, losses)`` — inactive carries pass through
+    as given (``None``); the builder callers drop them from the public
+    signatures.
     """
-    if fault_state is not None:
-        _, stale, fault_state, denom = fault_joint_inference(
-            params, batch, cfg, fault_state, faults)
-        params, opt_state, losses = local_update_steps(
-            params, opt_state, batch, stale, cfg, optimizer,
-            fault_w=faults.weight, fault_denom=denom)
-        return params, opt_state, fault_state, losses
+    if pol.sharded and cfg.labels_at_client is not None:
+        raise NotImplementedError(
+            "labels_at_client requires indexing the global client axis "
+            "(Alg 6 owner gradient); use the vmapped backend")
+    fault_w = fault_denom = None
     if cfg.agg_layers:
-        if compressor is None:
-            _, stale = joint_inference(params, batch, cfg, key)
-        else:
-            _, stale, comp_state = joint_inference(params, batch, cfg, key,
-                                                   compressor, comp_state)
+        _, stale, new_comp, new_cache, denom = _joint_inference_engine(
+            params, batch, cfg, pol, key=key, comp_state=comp_state,
+            fault_state=fault_state, faults=faults)
+        if pol.compressor is not None:
+            comp_state = new_comp
+        if pol.fault_tolerant:
+            fault_state = new_cache
+            i0 = jax.lax.axis_index(pol.axis_name) * pol.m_loc \
+                if pol.sharded else 0
+            fault_w = _slice_block(pol, faults.weight, i0)
+            fault_denom = denom
     else:
         # standalone: no communication; zero stale buffers never used
         stale = {}
@@ -625,47 +801,100 @@ def _round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer, params,
     if cfg.labels_at_client is not None:
         g_hl = label_owner_grad(params, batch, stale, cfg)
     params, opt_state, losses = local_update_steps(
-        params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl)
-    if compressor is None:
-        return params, opt_state, losses
-    return params, opt_state, comp_state, losses
+        params, opt_state, batch, stale, cfg, optimizer, g_hl=g_hl,
+        fault_w=fault_w, fault_denom=fault_denom,
+        axis_name=pol.axis_name, m_loc=pol.m_loc)
+    return params, opt_state, comp_state, fault_state, losses
+
+
+def _round_caller(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                  pol: ExecPolicy):
+    """Positional adapter from a policy's public round signature to
+    ``_round_body``. Argument order: ``params, opt_state, [comp_state,]
+    [fault_state,] batch, key[, faults]`` — each active carry adds one
+    state argument and one result (same order), faults append the round's
+    mask argument. This is the single function every builder wraps (jit /
+    shard_map / scan)."""
+    has_c, has_f = _policy_arity(pol)
+
+    def round_fn(*args):
+        args = list(args)
+        params, opt_state = args.pop(0), args.pop(0)
+        comp_state = args.pop(0) if has_c else None
+        fault_state = args.pop(0) if has_f else None
+        batch, key = args.pop(0), args.pop(0)
+        faults = args.pop(0) if has_f else None
+        p, s, cs, fs, losses = _round_body(
+            cfg, optimizer, pol, params, opt_state, batch, key,
+            comp_state=comp_state, fault_state=fault_state, faults=faults)
+        return (p, s) + ((cs,) if has_c else ()) + \
+            ((fs,) if has_f else ()) + (losses,)
+
+    return round_fn
+
+
+def _multi_round_caller(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                        pol: ExecPolicy):
+    """K-round scan over ``_round_caller``'s carry layout: active carries
+    ride in the scan carry (donated by the builders), batches/keys and the
+    (K, M) fault-mask stacks ride in the xs."""
+    has_c, has_f = _policy_arity(pol)
+    n_carry = 2 + has_c + has_f
+
+    def step_fn(*args):
+        carry_in = tuple(args[:n_carry])
+        batches, keys = args[n_carry], args[n_carry + 1]
+        xs = (batches, keys) + ((args[n_carry + 2],) if has_f else ())
+
+        def body(carry, xs_t):
+            p, s = carry[0], carry[1]
+            cs = carry[2] if has_c else None
+            fs = carry[2 + has_c] if has_f else None
+            batch, key = xs_t[0], xs_t[1]
+            f = xs_t[2] if has_f else None
+            p, s, cs, fs, losses = _round_body(
+                cfg, optimizer, pol, p, s, batch, key, comp_state=cs,
+                fault_state=fs, faults=f)
+            return (p, s) + ((cs,) if has_c else ()) + \
+                ((fs,) if has_f else ()), losses
+
+        carry_out, losses = jax.lax.scan(body, carry_in, xs)
+        return carry_out + (losses,)             # losses: (K, Q)
+
+    return step_fn
+
+
+def _checked(step_fn, rounds_per_step: int, what: str):
+    """Reject a batch stack whose leading round axis disagrees with the
+    static ``rounds_per_step`` hint loudly instead of silently scanning a
+    different number of rounds. ``_jit`` exposes cache introspection."""
+    def checked(*args):
+        batches = next(a for a in args if isinstance(a, SampledBatch))
+        k = batches.labels.shape[0]
+        if k != rounds_per_step:
+            raise ValueError(
+                f"{what} built for rounds_per_step={rounds_per_step} "
+                f"got a {k}-round batch stack")
+        return step_fn(*args)
+
+    checked._jit = step_fn                       # expose cache introspection
+    return checked
 
 
 def make_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer):
     """One jitted GLASU round; kept for per-round callers (simulation parity
     probes, unit tests). The training hot path is ``make_multi_round_fn``.
 
-    With ``cfg.compression`` active the returned function threads the
-    error-feedback carry: ``(params, opt_state, comp_state, batch, key) ->
-    (params, opt_state, comp_state, losses)``; otherwise the legacy
-    4-arg/3-result signature is unchanged (bit-identical code path).
-    With ``cfg.fault_tolerant`` the stale-cache carry and the round's fault
-    masks are threaded instead: ``(params, opt_state, fault_state, batch,
-    key, faults) -> (params, opt_state, fault_state, losses)``.
+    The signature follows the policy's carry layout (``_round_caller``):
+    the base ``(params, opt_state, batch, key) -> (params, opt_state,
+    losses)``; ``cfg.compression`` threads the error-feedback carry before
+    ``batch``; ``cfg.fault_tolerant`` threads the stale-cache carry there
+    and appends the round's ``RoundFaults`` masks. Both active (composed
+    fault-tolerant compressed rounds): ``(params, opt_state, comp_state,
+    fault_state, batch, key, faults) -> (params, opt_state, comp_state,
+    fault_state, losses)``.
     """
-    if cfg.fault_tolerant:
-        @jax.jit
-        def round_fn_f(params, opt_state, fault_state, batch: SampledBatch,
-                       key, faults: RoundFaults):
-            return _round_body(cfg, optimizer, params, opt_state, batch,
-                               key, fault_state=fault_state, faults=faults)
-
-        return round_fn_f
-
-    comp = compression.make_compressor(cfg.compression)
-    if comp is None:
-        @jax.jit
-        def round_fn(params, opt_state, batch: SampledBatch, key):
-            return _round_body(cfg, optimizer, params, opt_state, batch, key)
-
-        return round_fn
-
-    @jax.jit
-    def round_fn_c(params, opt_state, comp_state, batch: SampledBatch, key):
-        return _round_body(cfg, optimizer, params, opt_state, batch, key,
-                           comp, comp_state)
-
-    return round_fn_c
+    return jax.jit(_round_caller(cfg, optimizer, _policy(cfg)))
 
 
 def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
@@ -679,13 +908,14 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     host dispatch per K rounds instead of per round, which is where the
     per-round Python/runtime overhead of the Trainer loop goes.
 
-    params/opt_state are donated: the update is in-place at the XLA level,
-    halving parameter-buffer HBM traffic per step. Callers must treat the
-    passed-in trees as consumed (the Trainer immediately rebinds them).
+    Every carry (params, opt state, and any active sidecar) is donated:
+    the update is in-place at the XLA level, halving parameter-buffer HBM
+    traffic per step. Callers must treat the passed-in trees as consumed
+    (the Trainer immediately rebinds them).
 
-    Returns ``(params, opt_state, losses)`` with losses of shape (K, Q) —
-    per-round rows, so hook cadence semantics (loss reporting, comm
-    metering) are preserved exactly. K is read off the leading axis at
+    Returns ``(params, opt_state, ..., losses)`` with losses of shape
+    (K, Q) — per-round rows, so hook cadence semantics (loss reporting,
+    comm metering) are preserved exactly. K is read off the leading axis at
     trace time; distinct K values retrace (the Trainer cuts its schedule so
     a run uses one K, plus at most a tail/cadence remainder).
 
@@ -693,75 +923,18 @@ def make_multi_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     whose leading axis disagrees is rejected loudly instead of silently
     scanning a different number of rounds.
 
-    With ``cfg.compression`` active the error-feedback accumulators ride in
-    the scan carry next to the optimizer state and are donated with it:
-    ``(params, opt_state, comp_state, batches, keys) ->
-    (params, opt_state, comp_state, losses)``.
-
-    With ``cfg.fault_tolerant`` the stale-embedding cache rides in the scan
-    carry (donated) and the per-round fault masks ride in the scan xs as a
-    round-stacked ``RoundFaults`` of (K, M) leaves:
-    ``(params, opt_state, fault_state, batches, keys, faults) ->
-    (params, opt_state, fault_state, losses)``.
+    Carry layout per policy (``_round_caller``): ``cfg.compression`` adds
+    the error-feedback accumulators to the scan carry, ``cfg.fault_tolerant``
+    adds the stale-embedding cache and puts the round-stacked ``RoundFaults``
+    of (K, M) leaves in the scan xs — composed configs thread both.
     """
-    comp = compression.make_compressor(cfg.compression)
-
-    if cfg.fault_tolerant:
-        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-        def step_fn(params, opt_state, fault_state, batches: SampledBatch,
-                    keys, faults: RoundFaults):
-            def body(carry, xs):
-                p, s, fs = carry
-                batch, key, f = xs
-                p, s, fs, losses = _round_body(cfg, optimizer, p, s, batch,
-                                               key, fault_state=fs, faults=f)
-                return (p, s, fs), losses
-
-            (params, opt_state, fault_state), losses = jax.lax.scan(
-                body, (params, opt_state, fault_state),
-                (batches, keys, faults))
-            return params, opt_state, fault_state, losses
-    elif comp is None:
-        @functools.partial(jax.jit, donate_argnums=(0, 1))
-        def step_fn(params, opt_state, batches: SampledBatch, keys):
-            def body(carry, xs):
-                p, s = carry
-                batch, key = xs
-                p, s, losses = _round_body(cfg, optimizer, p, s, batch, key)
-                return (p, s), losses
-
-            (params, opt_state), losses = jax.lax.scan(
-                body, (params, opt_state), (batches, keys))
-            return params, opt_state, losses          # losses: (K, Q)
-    else:
-        @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
-        def step_fn(params, opt_state, comp_state, batches: SampledBatch,
-                    keys):
-            def body(carry, xs):
-                p, s, cs = carry
-                batch, key = xs
-                p, s, cs, losses = _round_body(cfg, optimizer, p, s, batch,
-                                               key, comp, cs)
-                return (p, s, cs), losses
-
-            (params, opt_state, comp_state), losses = jax.lax.scan(
-                body, (params, opt_state, comp_state), (batches, keys))
-            return params, opt_state, comp_state, losses
-
+    pol = _policy(cfg)
+    has_c, has_f = _policy_arity(pol)
+    step_fn = jax.jit(_multi_round_caller(cfg, optimizer, pol),
+                      donate_argnums=tuple(range(2 + has_c + has_f)))
     if rounds_per_step is None:
         return step_fn
-
-    def checked(*args):
-        batches = next(a for a in args if isinstance(a, SampledBatch))
-        k = batches.labels.shape[0]
-        if k != rounds_per_step:
-            raise ValueError(
-                f"multi-round step built for rounds_per_step="
-                f"{rounds_per_step} got a {k}-round batch stack")
-        return step_fn(*args)
-
-    checked._jit = step_fn                       # expose cache introspection
-    return checked
+    return _checked(step_fn, rounds_per_step, "multi-round step")
 
 
 # ------------------------------------------------------- sharded execution
@@ -834,171 +1007,30 @@ def sharded_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     ``record``, when given, is called with a ``CollectiveRecord`` per
     aggregation layer at trace time (the byte meter's measurement hook).
 
-    With ``fault_state``/``faults`` (masks replicated, cache client-block
-    sharded) each device substitutes its local cache blocks for absent
-    clients BEFORE the gather, then the identical weighted Agg of the
-    vmapped fault path runs on the gathered effective stack; a 3rd return
-    value carries the refreshed local cache blocks. The mesh collective
-    still ships M blocks per layer (the program is shape-static); the
-    federated WIRE meter prices only delivered uploads — see
-    ``docs/FAULTS.md``.
+    With ``fault_state``/``faults`` (masks replicated) each device
+    substitutes cached blocks for absent clients BEFORE the gather, then
+    the identical weighted Agg of the vmapped fault path runs on the
+    gathered effective stack; a 3rd return value carries the refreshed
+    cache. The mesh collective still ships M blocks per layer (the program
+    is shape-static); the federated WIRE meter prices only delivered
+    uploads — see ``docs/FAULTS.md``. With compression AND faults composed
+    the return is the engine's full ``(logits, stale, new_comp_state,
+    new_fault_state, denom)`` (the cache then holds the server's decoded
+    view, replicated — see ``_fault_state_specs``).
     """
-    h = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["inp"], batch.feats)
-    h0 = h
-    stale: Dict[int, Any] = {}
-    new_state: Dict[int, Any] = {}
-    i0 = jax.lax.axis_index(axis_name) * m_loc
-    for l in range(cfg.n_layers):  # glint: disable=GL004 static L-layer unroll; per-layer params are heterogeneous (widths change at agg boundaries)
-        layer = _client_layer(cfg, l)
-        h_plus = jax.vmap(layer)(params["layers"][l], h, h0,
-                                 batch.gather_idx[l], batch.gather_mask[l])
-        h0 = jax.vmap(lambda a, i: a[i])(h0, batch.self_pos[l])
-        if l in cfg.agg_layers:
-            subkey = jax.random.fold_in(key, l) if key is not None else None
-            if fault_state is not None:
-                p_blk = jax.lax.dynamic_slice_in_dim(faults.present, i0,
-                                                     m_loc, axis=0)
-                eff_blk = jnp.where(p_blk[:, None, None] > 0, h_plus,
-                                    fault_state[l])
-                new_state[l] = eff_blk
-                uploads = _gather_clients(eff_blk, axis_name)  # (M, n, h)
-                h_full, stale_full, _ = _fault_agg_math(cfg, uploads,
-                                                        faults.weight)
-                if record is not None:
-                    isz = jnp.dtype(uploads.dtype).itemsize
-                    record(CollectiveRecord(
-                        layer=l, n_clients=uploads.shape[0],
-                        n_rows=uploads.shape[1], width_up=uploads.shape[2],
-                        width_down=h_full.shape[-1], itemsize=isz,
-                        up_bytes=uploads.shape[1] * uploads.shape[2] * isz,
-                        down_bytes=uploads.shape[1] * h_full.shape[-1] * isz))
-                h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
-                stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0,
-                                                        m_loc, axis=0)
-            elif compressor is None:
-                uploads = _gather_clients(h_plus, axis_name)   # (M, n, h)
-                h_full, stale_full = _aggregate(cfg, uploads, subkey)
-                if record is not None:
-                    isz = jnp.dtype(uploads.dtype).itemsize
-                    record(CollectiveRecord(
-                        layer=l, n_clients=uploads.shape[0],
-                        n_rows=uploads.shape[1], width_up=uploads.shape[2],
-                        width_down=h_full.shape[-1], itemsize=isz,
-                        up_bytes=uploads.shape[1] * uploads.shape[2] * isz,
-                        down_bytes=uploads.shape[1] * h_full.shape[-1] * isz))
-                h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
-                stale[l] = jax.lax.dynamic_slice_in_dim(stale_full, i0,
-                                                        m_loc, axis=0)
-            else:
-                ef_l = comp_state.get(l) if comp_state else None
-                h, stale[l], new_ef = _compressed_aggregate(
-                    cfg, compressor, h_plus, ef_l, subkey,
-                    gather=lambda x: _gather_clients(x, axis_name),
-                    i0=i0, record=record, layer=l)
-                if new_ef is not None:
-                    new_state[l] = new_ef
-        else:
-            h = h_plus
-    logits = jax.vmap(lambda p, x: x @ p["W"] + p["b"])(params["cls"], h)
-    if compressor is None and fault_state is None:
-        return logits, stale
-    return logits, stale, new_state
-
-
-def _sharded_local_update_steps(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
-                                params, opt_state, batch: SampledBatch, stale,
-                                axis_name: str, m_loc: int,
-                                fault_w=None, fault_denom=None):
-    """Q iterations of Alg 4 on the local client block (device-local: the
-    stale buffers already hold H_{-m}, so no communication — exactly the
-    paper's client-side phase). Only the reported mean loss crosses devices
-    (an all_gather of Q scalars per round; diagnostics, not algorithm
-    traffic, hence unmetered).
-
-    ``fault_w`` (local (m_loc,) block of the round's participation weights)
-    and ``fault_denom`` thread the fault-tolerant combine — each client
-    weights its fresh block exactly as the server's weighted Agg did.
-    """
-    labels = batch.labels
-    m_local = jnp.arange(m_loc)
-    m_global = jax.lax.axis_index(axis_name) * m_loc + m_local
-
-    def one_step(carry, _):
-        p, s = carry
-
-        def per_client(params_m, feats_m, stale_m, m_index, g_index,
-                       w_m=None):
-            return client_loss(params_m, feats_m, batch, stale_m, labels,
-                               cfg, m_index, global_index=g_index,
-                               fault_w=w_m, fault_denom=fault_denom)
-
-        if fault_w is None:
-            loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                                   in_axes=(0, 0, 0, 0, 0))(
-                p, batch.feats, stale, m_local, m_global)
-        else:
-            loss, grads = jax.vmap(jax.value_and_grad(per_client),
-                                   in_axes=(0, 0, 0, 0, 0, 0))(
-                p, batch.feats, stale, m_local, m_global, fault_w)
-        updates, s = optimizer.update(grads, s, p)
-        p = opt_lib.apply_updates(p, updates)
-        # gather to the global (M,) loss row so the reported mean is the
-        # same reduction as the vmapped path's jnp.mean over all clients
-        return (p, s), jnp.mean(_gather_clients(loss, axis_name))
-
-    (params, opt_state), losses = jax.lax.scan(
-        one_step, (params, opt_state), None, length=cfg.n_local_steps)
-    return params, opt_state, losses
-
-
-def _sharded_round_body(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
-                        axis_name: str, m_loc: int, params, opt_state,
-                        batch: SampledBatch, key, record=None,
-                        compressor: Optional[Compressor] = None,
-                        comp_state=None, fault_state=None,
-                        faults: Optional[RoundFaults] = None):
-    """One GLASU round on local client blocks (Alg 1 body under shard_map).
-
-    With a compressor the error-feedback carry is threaded (uplink
-    accumulators hold the LOCAL client block, the downlink accumulator is
-    replicated) and a 4-tuple is returned. With ``fault_state``/``faults``
-    (mutually exclusive with compression) the stale-embedding cache carry
-    is threaded instead — also a 4-tuple.
-    """
-    if cfg.labels_at_client is not None:
-        raise NotImplementedError(
-            "labels_at_client requires indexing the global client axis "
-            "(Alg 6 owner gradient); use the vmapped backend")
+    pol = ExecPolicy(axis_name=axis_name, m_loc=m_loc,
+                     compressor=compressor,
+                     fault_tolerant=fault_state is not None, record=record)
+    logits, stale, new_comp, new_cache, denom = _joint_inference_engine(
+        params, batch, cfg, pol, key=key, comp_state=comp_state,
+        fault_state=fault_state, faults=faults)
+    if compressor is not None and fault_state is not None:
+        return logits, stale, new_comp, new_cache, denom
+    if compressor is not None:
+        return logits, stale, new_comp
     if fault_state is not None:
-        _, stale, fault_state = sharded_joint_inference(
-            params, batch, cfg, key, axis_name=axis_name, m_loc=m_loc,
-            record=record, fault_state=fault_state, faults=faults)
-        i0 = jax.lax.axis_index(axis_name) * m_loc
-        w_blk = jax.lax.dynamic_slice_in_dim(faults.weight, i0, m_loc, axis=0)
-        if cfg.agg == "mean":
-            denom = jnp.maximum(jnp.sum(faults.weight), 1.0)
-        else:
-            denom = jnp.asarray(1.0, jnp.float32)
-        params, opt_state, losses = _sharded_local_update_steps(
-            cfg, optimizer, params, opt_state, batch, stale, axis_name,
-            m_loc, fault_w=w_blk, fault_denom=denom)
-        return params, opt_state, fault_state, losses
-    if cfg.agg_layers:
-        if compressor is None:
-            _, stale = sharded_joint_inference(params, batch, cfg, key,
-                                               axis_name=axis_name,
-                                               m_loc=m_loc, record=record)
-        else:
-            _, stale, comp_state = sharded_joint_inference(
-                params, batch, cfg, key, axis_name=axis_name, m_loc=m_loc,
-                record=record, compressor=compressor, comp_state=comp_state)
-    else:
-        stale = {}
-    params, opt_state, losses = _sharded_local_update_steps(
-        cfg, optimizer, params, opt_state, batch, stale, axis_name, m_loc)
-    if compressor is None:
-        return params, opt_state, losses
-    return params, opt_state, comp_state, losses
+        return logits, stale, new_cache
+    return logits, stale
 
 
 def _client_axis_check(cfg: GlasuConfig, mesh, axis: str) -> int:
@@ -1056,13 +1088,47 @@ def _comp_state_specs(cfg: GlasuConfig, comp: Optional[Compressor],
     return {l: {"up": P(axis), "down": P()} for l in cfg.agg_layers}
 
 
-def _fault_state_specs(cfg: GlasuConfig, axis: str):
-    """shard_map specs for the stale-embedding cache carry: each device
-    holds its LOCAL client block of every per-layer cache stack (the same
-    layout as the uplink error-feedback accumulators)."""
+def _fault_state_specs(cfg: GlasuConfig, axis: str,
+                       replicated: bool = False):
+    """shard_map specs for the stale-embedding cache carry.
+
+    Plain fault tolerance: each device holds its LOCAL client block of
+    every per-layer cache stack (the same layout as the uplink
+    error-feedback accumulators). Composed with compression
+    (``replicated=True``): the cache holds the server's DECODED view,
+    recomputed identically on every device from the gathered wire payload
+    — replicated, not client-sharded.
+    """
     from jax.sharding import PartitionSpec as P
 
-    return {l: P(axis) for l in cfg.agg_layers}
+    return {l: P() if replicated else P(axis) for l in cfg.agg_layers}
+
+
+def _round_specs(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
+                 pol: ExecPolicy, axis: str, round_stacked: bool = False):
+    """(in_specs, out_specs) for shard_mapping a policy's round caller —
+    the spec-tree mirror of ``_round_caller``'s argument layout. The PRNG
+    key, the fault masks (single (M,) rows and round-stacked (K, M) alike)
+    and the loss rows are replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    has_c, has_f = _policy_arity(pol)
+    pspecs, ospecs, bspecs = _sharded_specs(cfg, optimizer, axis,
+                                            round_stacked=round_stacked)
+    in_specs, out_specs = [pspecs, ospecs], [pspecs, ospecs]
+    if has_c:
+        cspecs = _comp_state_specs(cfg, pol.compressor, axis)
+        in_specs.append(cspecs)
+        out_specs.append(cspecs)
+    if has_f:
+        fspecs = _fault_state_specs(cfg, axis, replicated=has_c)
+        in_specs.append(fspecs)
+        out_specs.append(fspecs)
+    in_specs += [bspecs, P()]
+    if has_f:
+        in_specs.append(RoundFaults(present=P(), weight=P()))
+    out_specs.append(P())
+    return tuple(in_specs), tuple(out_specs)
 
 
 def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
@@ -1073,52 +1139,19 @@ def make_sharded_round_fn(cfg: GlasuConfig, optimizer: opt_lib.Optimizer,
     ``record`` (see ``CollectiveRecord``) observes the aggregation
     collectives at trace time; ``jit=False`` returns the bare shard_map'd
     callable, which is what the byte meter abstractly evaluates at bind.
-    With ``cfg.compression`` active the signature gains the error-feedback
-    carry: ``(params, opt_state, comp_state, batch, key)``; with
-    ``cfg.fault_tolerant`` it gains the stale-cache carry and the round's
-    fault masks: ``(params, opt_state, fault_state, batch, key, faults)``."""
+    The signature follows the policy's carry layout exactly as
+    ``make_round_fn``'s does: ``cfg.compression`` threads the
+    error-feedback carry before ``batch``, ``cfg.fault_tolerant`` threads
+    the stale-cache carry there and appends the round's fault masks —
+    composed configs thread both: ``(params, opt_state, comp_state,
+    fault_state, batch, key, faults)``."""
     from jax.experimental.shard_map import shard_map
 
     m_loc = _client_axis_check(cfg, mesh, axis)
-    pspecs, ospecs, bspecs = _sharded_specs(cfg, optimizer, axis)
-    from jax.sharding import PartitionSpec as P
-
-    if cfg.fault_tolerant:
-        fspecs = _fault_state_specs(cfg, axis)
-        mask_specs = RoundFaults(present=P(), weight=P())
-
-        def body_f(params, opt_state, fault_state, batch, key, faults):
-            p, s, fs, losses = _sharded_round_body(
-                cfg, optimizer, axis, m_loc, params, opt_state, batch, key,
-                record=record, fault_state=fault_state, faults=faults)
-            return p, s, fs, losses
-
-        fn = shard_map(body_f, mesh=mesh,
-                       in_specs=(pspecs, ospecs, fspecs, bspecs, P(),
-                                 mask_specs),
-                       out_specs=(pspecs, ospecs, fspecs, P()),
-                       check_rep=False)
-        return jax.jit(fn) if jit else fn
-
-    comp = compression.make_compressor(cfg.compression)
-    if comp is None:
-        body = functools.partial(_sharded_round_body, cfg, optimizer, axis,
-                                 m_loc, record=record)
-        fn = shard_map(body, mesh=mesh,
-                       in_specs=(pspecs, ospecs, bspecs, P()),
-                       out_specs=(pspecs, ospecs, P()), check_rep=False)
-        return jax.jit(fn) if jit else fn
-
-    cspecs = _comp_state_specs(cfg, comp, axis)
-
-    def body_c(params, opt_state, comp_state, batch, key):
-        return _sharded_round_body(cfg, optimizer, axis, m_loc, params,
-                                   opt_state, batch, key, record=record,
-                                   compressor=comp, comp_state=comp_state)
-
-    fn = shard_map(body_c, mesh=mesh,
-                   in_specs=(pspecs, ospecs, cspecs, bspecs, P()),
-                   out_specs=(pspecs, ospecs, cspecs, P()), check_rep=False)
+    pol = _policy(cfg, axis_name=axis, m_loc=m_loc, record=record)
+    in_specs, out_specs = _round_specs(cfg, optimizer, pol, axis)
+    fn = shard_map(_round_caller(cfg, optimizer, pol), mesh=mesh,
+                   in_specs=in_specs, out_specs=out_specs, check_rep=False)
     return jax.jit(fn) if jit else fn
 
 
@@ -1127,98 +1160,24 @@ def make_sharded_multi_round_fn(cfg: GlasuConfig,
                                 axis: str = "clients",
                                 rounds_per_step: Optional[int] = None):
     """K sharded rounds per dispatch: ``lax.scan`` INSIDE the shard_map, so
-    one collective program advances all K rounds — same donation and
-    round-stacked batch contract as ``make_multi_round_fn``."""
+    one collective program advances all K rounds — same donation,
+    carry-layout and round-stacked batch contract as
+    ``make_multi_round_fn`` (the (K, M) fault-mask stacks ride the scan
+    xs, replicated across devices)."""
     from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
 
     m_loc = _client_axis_check(cfg, mesh, axis)
-    pspecs, ospecs, _ = _sharded_specs(cfg, optimizer, axis)
-    _, _, bspecs_k = _sharded_specs(cfg, optimizer, axis, round_stacked=True)
-    comp = compression.make_compressor(cfg.compression)
-
-    if cfg.fault_tolerant:
-        fspecs = _fault_state_specs(cfg, axis)
-        # (K, M) mask stacks ride the scan xs, replicated across devices
-        mask_specs = RoundFaults(present=P(), weight=P())
-
-        def scan_body_f(params, opt_state, fault_state, batches, keys,
-                        faults):
-            def body(carry, xs):
-                p, s, fs = carry
-                batch, key, f = xs
-                p, s, fs, losses = _sharded_round_body(
-                    cfg, optimizer, axis, m_loc, p, s, batch, key,
-                    fault_state=fs, faults=f)
-                return (p, s, fs), losses
-
-            (params, opt_state, fault_state), losses = jax.lax.scan(
-                body, (params, opt_state, fault_state),
-                (batches, keys, faults))
-            return params, opt_state, fault_state, losses
-
-        step_fn = jax.jit(
-            shard_map(scan_body_f, mesh=mesh,
-                      in_specs=(pspecs, ospecs, fspecs, bspecs_k, P(),
-                                mask_specs),
-                      out_specs=(pspecs, ospecs, fspecs, P()),
-                      check_rep=False),
-            donate_argnums=(0, 1, 2))
-    elif comp is None:
-        def scan_body(params, opt_state, batches, keys):
-            def body(carry, xs):
-                p, s = carry
-                batch, key = xs
-                p, s, losses = _sharded_round_body(cfg, optimizer, axis,
-                                                   m_loc, p, s, batch, key)
-                return (p, s), losses
-
-            (params, opt_state), losses = jax.lax.scan(
-                body, (params, opt_state), (batches, keys))
-            return params, opt_state, losses          # losses: (K, Q)
-
-        step_fn = jax.jit(
-            shard_map(scan_body, mesh=mesh,
-                      in_specs=(pspecs, ospecs, bspecs_k, P()),
-                      out_specs=(pspecs, ospecs, P()), check_rep=False),
-            donate_argnums=(0, 1))
-    else:
-        cspecs = _comp_state_specs(cfg, comp, axis)
-
-        def scan_body_c(params, opt_state, comp_state, batches, keys):
-            def body(carry, xs):
-                p, s, cs = carry
-                batch, key = xs
-                p, s, cs, losses = _sharded_round_body(
-                    cfg, optimizer, axis, m_loc, p, s, batch, key,
-                    compressor=comp, comp_state=cs)
-                return (p, s, cs), losses
-
-            (params, opt_state, comp_state), losses = jax.lax.scan(
-                body, (params, opt_state, comp_state), (batches, keys))
-            return params, opt_state, comp_state, losses
-
-        step_fn = jax.jit(
-            shard_map(scan_body_c, mesh=mesh,
-                      in_specs=(pspecs, ospecs, cspecs, bspecs_k, P()),
-                      out_specs=(pspecs, ospecs, cspecs, P()),
-                      check_rep=False),
-            donate_argnums=(0, 1, 2))
-
+    pol = _policy(cfg, axis_name=axis, m_loc=m_loc)
+    has_c, has_f = _policy_arity(pol)
+    in_specs, out_specs = _round_specs(cfg, optimizer, pol, axis,
+                                       round_stacked=True)
+    step_fn = jax.jit(
+        shard_map(_multi_round_caller(cfg, optimizer, pol), mesh=mesh,
+                  in_specs=in_specs, out_specs=out_specs, check_rep=False),
+        donate_argnums=tuple(range(2 + has_c + has_f)))
     if rounds_per_step is None:
         return step_fn
-
-    def checked(*args):
-        batches = next(a for a in args if isinstance(a, SampledBatch))
-        k = batches.labels.shape[0]
-        if k != rounds_per_step:
-            raise ValueError(
-                f"sharded multi-round step built for rounds_per_step="
-                f"{rounds_per_step} got a {k}-round batch stack")
-        return step_fn(*args)
-
-    checked._jit = step_fn
-    return checked
+    return _checked(step_fn, rounds_per_step, "sharded multi-round step")
 
 
 def make_sharded_joint_fn(cfg: GlasuConfig, mesh, axis: str = "clients"):
@@ -1345,8 +1304,8 @@ def serve_forward(params, batch: SampledBatch, cfg: GlasuConfig,
             if compressor is None:
                 h, _ = _aggregate(cfg, h_plus)
             else:
-                h, _, _ = _compressed_aggregate(cfg, compressor, h_plus,
-                                                None, layer=l)
+                h = _compressed_aggregate(cfg, compressor, h_plus,
+                                          None, layer=l)[0]
             if cache_inject is not None and l in cache_inject:
                 keep, rows = cache_inject[l]
                 h = jnp.where(keep[None, :, None] > 0, rows, h)
@@ -1380,10 +1339,10 @@ def sharded_serve_forward(params, batch: SampledBatch, cfg: GlasuConfig, *,
                 h_full, _ = _aggregate(cfg, uploads)
                 h = jax.lax.dynamic_slice_in_dim(h_full, i0, m_loc, axis=0)
             else:
-                h, _, _ = _compressed_aggregate(
+                h = _compressed_aggregate(
                     cfg, compressor, h_plus, None,
                     gather=lambda x: _gather_clients(x, axis_name),
-                    i0=i0, layer=l)
+                    i0=i0, layer=l)[0]
             if cache_inject is not None and l in cache_inject:
                 keep, rows = cache_inject[l]
                 rows_blk = jax.lax.dynamic_slice_in_dim(rows, i0, m_loc,

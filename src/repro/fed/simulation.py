@@ -94,22 +94,31 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     ``glasu._compressed_aggregate``, implemented independently). In that
     mode the return tuples gain a trailing ``new_comp_state``.
 
-    With ``fault_state``/``plan`` (a ``fed.faults.RoundPlan``; mutually
-    exclusive with ``compressor``) the deadline round is replayed message
-    by message: every ATTEMPTED upload is logged at its virtual arrival
-    time ``plan.t_start + latency``, with ``dropped=True`` when it was
-    lost or landed past the deadline (dropped messages never count on the
-    delivered-only meter). The server substitutes each absent client's
-    cached block, aggregates with the plan's weights (the same weighted
-    Agg as ``glasu._fault_agg_math``), and broadcasts at ``plan.t_end``.
-    The return tuples gain a trailing ``new_fault_state``.
+    With ``fault_state``/``plan`` (a ``fed.faults.RoundPlan``) the deadline
+    round is replayed message by message: every ATTEMPTED upload is logged
+    at its virtual arrival time ``plan.t_start + latency``, with
+    ``dropped=True`` when it was lost or landed past the deadline (dropped
+    messages never count on the delivered-only meter). The server
+    substitutes each absent client's cached block, aggregates with the
+    plan's weights (the same weighted Agg as ``glasu._fault_agg_math``),
+    and broadcasts at ``plan.t_end``. The return tuples gain a trailing
+    ``new_fault_state``.
+
+    Composed (both ``compressor`` and ``fault_state``): attempted uploads
+    are logged at their COMPRESSED wire size (a dropped upload still
+    shipped a compressed payload; the delivered-only meter just never
+    counts it), the cache holds each client's last DELIVERED decoded
+    block, and EF residuals freeze for clients that never transmitted —
+    the same protocol as ``glasu._compressed_aggregate``'s composed mode,
+    implemented independently. The return tuples gain TWO trailing values:
+    ``new_comp_state, new_fault_state``.
     """
     assert cfg.agg == "mean"
-    assert compressor is None or fault_state is None
     m_clients = cfg.n_clients
     log = log if log is not None else MessageLog()
     stale: Dict[int, Any] = {}
     new_state: Dict[int, Any] = {}
+    new_cache: Dict[int, Any] = {}
 
     h = []
     h0 = []
@@ -129,7 +138,50 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
             h_plus.append(hp)
             h0[m] = h0[m][batch.self_pos[l][m]]
         if l in cfg.agg_layers:
-            if fault_state is not None:
+            if fault_state is not None and compressor is not None:
+                # composed deadline round over the wire codec
+                ef_l = comp_state.get(l) if comp_state else None
+                w = np.asarray(plan.weight, np.float64)  # glint: disable=GL003 host-side reference aggregation; f64 accumulation keeps the python-float replay deterministic
+                denom = max(float(w.sum()), 1.0)
+                eff, new_ef_up = [], []
+                for m in range(m_clients):
+                    up_in = h_plus[m] if ef_l is None \
+                        else h_plus[m] + ef_l["up"][m]
+                    payload = compressor.encode(up_in)
+                    x_hat = compressor.decode(payload, h_plus[m].shape[-1])
+                    if plan.attempted[m]:          # shipped a wire payload
+                        lat = float(plan.latency_ms[m])
+                        t_arrive = (plan.t_start + lat if np.isfinite(lat)
+                                    else plan.t_end)
+                        log.send(f"client{m}", "server", "upload", l,
+                                 payload, t=t_arrive,
+                                 dropped=plan.present[m] == 0)
+                    delivered = plan.present[m] > 0
+                    # cache the DECODED view of delivered uploads only
+                    eff.append(x_hat if delivered else fault_state[l][m])
+                    if ef_l is not None:
+                        # absent clients never transmitted: residual frozen
+                        new_ef_up.append(
+                            compressor.ef_decay * (up_in - x_hat)
+                            if delivered else ef_l["up"][m])
+                agg = sum(float(w[m]) * eff[m]
+                          for m in range(m_clients)) / denom
+                down_payload, down_hat, ef_down = \
+                    compression.roundtrip_with_ef(
+                        compressor, agg,
+                        None if ef_l is None else ef_l["down"])
+                for m in range(m_clients):         # broadcasts at close
+                    log.send("server", f"client{m}", "broadcast", l,
+                             down_payload, t=plan.t_end)
+                stale[l] = jnp.stack([down_hat - float(w[m]) * eff[m] / denom
+                                      for m in range(m_clients)])
+                for m in range(m_clients):
+                    h[m] = stale[l][m] + float(w[m]) * h_plus[m] / denom
+                new_cache[l] = jnp.stack(eff)
+                if ef_l is not None:
+                    new_state[l] = {"up": jnp.stack(new_ef_up),
+                                    "down": ef_down}
+            elif fault_state is not None:
                 w = np.asarray(plan.weight, np.float64)  # glint: disable=GL003 host-side reference aggregation; f64 accumulation keeps the python-float replay deterministic
                 denom = max(float(w.sum()), 1.0)
                 eff = []
@@ -151,7 +203,7 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
                     h[m] = agg
                 stale[l] = jnp.stack([agg - float(w[m]) * eff[m] / denom
                                       for m in range(m_clients)])
-                new_state[l] = jnp.stack(eff)
+                new_cache[l] = jnp.stack(eff)
             elif compressor is None:
                 for m in range(m_clients):             # uploads
                     log.send(f"client{m}", "server", "upload", l, h_plus[m])
@@ -200,8 +252,12 @@ def simulate_joint_inference(params, batch: SampledBatch, cfg: GlasuConfig,
     if return_stale:
         out = out + (stale,)
     out = out + (log,)
-    if compressor is not None or fault_state is not None:
+    if compressor is not None and fault_state is not None:
+        out = out + (new_state, new_cache)
+    elif compressor is not None:
         out = out + (new_state,)
+    elif fault_state is not None:
+        out = out + (new_cache,)
     return out
 
 
@@ -334,7 +390,8 @@ def simulate_round(params, opt_state, batch: SampledBatch, cfg: GlasuConfig,
 
 
 def simulate_fault_round(params, opt_state, batch: SampledBatch,
-                         cfg: GlasuConfig, optimizer, fault_state, plan):
+                         cfg: GlasuConfig, optimizer, fault_state, plan,
+                         compressor: Compressor = None, comp_state=None):
     """One fault-tolerant GLASU round over explicit, timestamped messages.
 
     The index sync opens the round at ``plan.t_start`` (every client —
@@ -344,16 +401,27 @@ def simulate_fault_round(params, opt_state, batch: SampledBatch,
     LocalUpdates weight each client's fresh block exactly as the server's
     weighted Agg did (``fault_w``/``fault_denom``).
 
-    Returns (params, opt_state, losses, log, new_fault_state).
+    Returns (params, opt_state, losses, log, new_fault_state). With a
+    ``compressor`` the exchange runs composed (compressed wire payloads +
+    deadline substitution; see ``simulate_joint_inference``) and the
+    return gains a trailing ``new_comp_state``.
     """
     log = MessageLog()
     log_index_sync(log, batch, cfg, t=plan.t_start)
-    _, stale, _, new_cache = simulate_joint_inference(
-        params, batch, cfg, log=log, return_stale=True,
-        fault_state=fault_state, plan=plan)
+    if compressor is None:
+        _, stale, _, new_cache = simulate_joint_inference(
+            params, batch, cfg, log=log, return_stale=True,
+            fault_state=fault_state, plan=plan)
+    else:
+        _, stale, _, comp_state, new_cache = simulate_joint_inference(
+            params, batch, cfg, log=log, return_stale=True,
+            compressor=compressor, comp_state=comp_state,
+            fault_state=fault_state, plan=plan)
     w = jnp.asarray(plan.weight, jnp.float32)
     denom = jnp.maximum(jnp.sum(w), 1.0)
     params, opt_state, losses = glasu.local_update_steps(
         params, opt_state, batch, stale, cfg, optimizer,
         fault_w=w, fault_denom=denom)
-    return params, opt_state, losses, log, new_cache
+    if compressor is None:
+        return params, opt_state, losses, log, new_cache
+    return params, opt_state, losses, log, new_cache, comp_state

@@ -258,11 +258,19 @@ def client_comp_state_specs(comp_state, mesh: Mesh, axis: str = "clients"):
             for l, st in comp_state.items()}
 
 
-def client_fault_state_specs(fault_state, mesh: Mesh, axis: str = "clients"):
+def client_fault_state_specs(fault_state, mesh: Mesh, axis: str = "clients",
+                             replicated: bool = False):
     """Specs for the fault-tolerant stale-embedding cache
     (``core.glasu.init_fault_state``): every per-layer cache stack is
     client-stacked ``(M, n, h)`` and shards its client dim over ``axis``
     (guarded). The round's ``RoundFaults`` masks are replicated — they are
-    (M,) vectors every device reads in full."""
+    (M,) vectors every device reads in full.
+
+    ``replicated=True`` (fault tolerance composed with wire compression):
+    the cache holds the server's DECODED view, recomputed identically on
+    every device from the gathered payload — the whole stack is replicated
+    (mirrors ``core.glasu._fault_state_specs``)."""
+    if replicated:
+        return {l: P() for l in fault_state}
     return {l: client_leaf_spec(cache, mesh, axis)
             for l, cache in fault_state.items()}

@@ -58,7 +58,6 @@ def test_fault_config_active_property():
 
 
 @pytest.mark.parametrize("kw,msg", [
-    (dict(compression={"method": "int8"}), "compression"),
     (dict(secure_agg=True), "privacy hooks"),
     (dict(dp_sigma=0.1), "privacy hooks"),
     (dict(labels_at_client=0), "labels_at_client"),
@@ -74,6 +73,18 @@ def test_experiment_config_coerces_and_roundtrips_faults():
     assert isinstance(cfg.faults, FaultConfig)
     assert cfg.glasu_config(make_vfl_dataset(
         "tiny", n_clients=cfg.n_clients, seed=0)).fault_tolerant
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_experiment_config_accepts_faults_with_compression():
+    """faults x compression compose since the round-engine unification:
+    the codec runs on the fault exchange (the server caches each client's
+    last DELIVERED decoded block; EF freezes for absent clients)."""
+    cfg = _cfg(faults={"seed": 1, "participation": 0.67},
+               compression={"method": "int8", "error_feedback": True})
+    mcfg = cfg.glasu_config(make_vfl_dataset(
+        "tiny", n_clients=cfg.n_clients, seed=0))
+    assert mcfg.fault_tolerant and mcfg.compression.active
     assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
 
 
@@ -259,6 +270,184 @@ def test_trainer_participation_telemetry_and_virtual_clock():
     # partial participation must actually have priced fewer delivered bytes
     dense = Trainer(_cfg()).run()
     assert 0 < res.comm_bytes < dense.comm_bytes
+
+
+# -------------------------------------- degraded mode / mixed precision
+@pytest.mark.parametrize("agg", ["mean", "concat"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fault_agg_math_preserves_upload_dtype(agg, dtype):
+    """Degraded-mode conformance row (mixed-precision uploads under
+    partial participation): the weighted-mean denominator is cast to the
+    uploads dtype exactly once, inside ``_fault_agg_math`` — the sharded
+    engine previously divided by an f32 weak type, silently upcasting
+    bf16 exchanges (the dtype drift the unified round body retired)."""
+    cfg = _cfg(faults={"seed": 0, "participation": 0.67}).with_(agg=agg)
+    mcfg = cfg.glasu_config(make_vfl_dataset(
+        "tiny", n_clients=cfg.n_clients, seed=0))
+    rng = np.random.default_rng(0)
+    m, n, h = mcfg.n_clients, 8, mcfg.hidden
+    uploads = jnp.asarray(rng.normal(size=(m, n, h)), dtype)
+    weight = jnp.asarray([1.0, 0.0, 1.0][:m])     # partial participation
+    agg_out, stale, denom = glasu._fault_agg_math(mcfg, uploads, weight)
+    assert agg_out.dtype == uploads.dtype
+    assert stale.dtype == uploads.dtype
+    assert denom.dtype == uploads.dtype
+    if agg == "mean":
+        # value check against a host-side f64 reference of the weighted
+        # mean (NumPy only — never crosses into a trace)
+        w = np.asarray(weight, np.float64)[:, None, None]  # glint: disable=GL003 host-side reference math
+        u = np.asarray(uploads.astype(jnp.float32), np.float64)  # glint: disable=GL003 host-side reference math
+        ref = (w * u).sum(axis=0) / max(float(w.sum()), 1.0)
+        tol = 1e-6 if dtype == jnp.float32 else 0.05
+        np.testing.assert_allclose(
+            np.asarray(agg_out[0].astype(jnp.float32), np.float64), ref,  # glint: disable=GL003 host-side reference math
+            rtol=tol, atol=tol)
+
+
+# ----------------------- composed faults x compression (unified engine)
+def test_composed_round_vmapped_matches_simulation_and_audits_bytes():
+    """One faults+int8 exchange through the unified round body (vmapped)
+    and the independent NumPy replay must agree within SIM_TOL — and the
+    delivered-only meter must equal the analytic cost model TERM BY TERM
+    against the simulation message log: compressed wire size for present
+    clients' uploads only, all-M compressed broadcasts, and the
+    codec-independent int32 index sync."""
+    from repro.comm.compression import make_compressor
+
+    cfg, mcfg, sampler, params = _fault_setup(
+        {"seed": 7, "drop_prob": 0.4, "deadline_ms": 40.0,
+         "base_latency_ms": 5.0})
+    cfg = cfg.with_(compression={"method": "int8", "error_feedback": True})
+    data = make_vfl_dataset(cfg.dataset, n_clients=cfg.n_clients, seed=0)
+    mcfg = cfg.glasu_config(data)
+    comp = make_compressor(mcfg.compression)
+    opt = cfg.make_optimizer()
+    sched = make_schedule(cfg.faults, mcfg.n_clients)
+    round_fn = glasu.make_round_fn(mcfg, opt)
+
+    pv, ov = params, opt.init(params)
+    cs_v = glasu.init_comp_state(mcfg, sampler.layer_sizes, comp)
+    fs_v = glasu.init_fault_state(mcfg, sampler.layer_sizes)
+    ps, os_ = params, opt.init(params)
+    cs_s, fs_s = cs_v, fs_v
+    saw_partial = False
+    for r in range(5):
+        plan = sched.next_round()
+        batch = jax.tree.map(jnp.asarray, sampler.sample_round())
+        masks = glasu.RoundFaults(jnp.asarray(plan.present),
+                                  jnp.asarray(plan.weight))
+        pv, ov, cs_v, fs_v, losses_v = round_fn(
+            pv, ov, cs_v, fs_v, batch, jax.random.PRNGKey(r), masks)
+        (ps, os_, losses_s, log, fs_s,
+         cs_s) = simulation.simulate_fault_round(
+            ps, os_, batch, mcfg, opt, fs_s, plan,
+            compressor=comp, comp_state=cs_s)
+        np.testing.assert_allclose(np.asarray(losses_v),
+                                   np.asarray(losses_s), **SIM_TOL)
+        # term-by-term audit: analytic model == message log
+        m, h = mcfg.n_clients, mcfg.hidden
+        index_sync = sum(2 * m * sampler.layer_sizes[j] * 4
+                         for j in range(mcfg.n_layers + 1)
+                         if sampler._shared(j))
+        up = {l: comp.wire_bytes(sampler.layer_sizes[l + 1], h)
+              for l in mcfg.agg_layers}
+        down = up                     # mean agg: downlink width == hidden
+        n_att = int(plan.attempted.sum())
+        assert log.total_bytes("index_sync") == index_sync
+        assert log.total_bytes("upload") == \
+            plan.n_present * sum(up.values())
+        assert log.total_bytes("upload", delivered_only=False) == \
+            n_att * sum(up.values())
+        assert log.total_bytes("broadcast") == m * sum(down.values())
+        want = index_sync + sum(plan.n_present * up[l] + m * down[l]
+                                for l in mcfg.agg_layers)
+        assert log.total_bytes() == want
+        assert want == sampler.comm_bytes_per_joint_inference(
+            h, agg=mcfg.agg, compressor=comp, n_uploads=plan.n_present)
+        assert len(log.dropped_messages()) == \
+            (n_att - plan.n_present) * len(mcfg.agg_layers)
+        saw_partial |= plan.n_present < n_att
+    assert saw_partial          # the profile actually dropped something
+    for (pa, la), (_, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(pv),
+            jax.tree_util.tree_leaves_with_path(ps)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   **SIM_TOL,
+                                   err_msg=jax.tree_util.keystr(pa))
+
+
+def test_composed_e2e_trainer_resume_bitwise(tmp_path):
+    """Faults + int8 EF compose end-to-end: an interrupted run restores
+    BOTH sidecars (comp_<step>.npz EF accumulators, fault_<step>.npz
+    stale caches + schedule state) bitwise, so the resumed run reproduces
+    the uninterrupted one exactly."""
+    data = make_vfl_dataset("tiny", n_clients=3, seed=0)
+    base = _cfg(faults={"seed": 5, "drop_prob": 0.3, "deadline_ms": 40.0,
+                        "base_latency_ms": 5.0},
+                compression={"method": "int8", "error_feedback": True},
+                rounds=4, eval_every=2)
+    cfg = base.with_(ckpt_dir=str(tmp_path), ckpt_every=2, rounds=2)
+    Trainer(cfg, data=data).run()
+    assert (tmp_path / "comp_00000002.npz").exists()
+    assert (tmp_path / "fault_00000002.npz").exists()
+
+    res = Trainer(cfg.with_(rounds=4), data=data).run()   # resume 2 -> 4
+    straight = Trainer(base, data=data).run()
+    for (pa, la), (_, lb) in zip(
+            jax.tree_util.tree_leaves_with_path(res.params),
+            jax.tree_util.tree_leaves_with_path(straight.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=jax.tree_util.keystr(pa))
+    assert res.comm_bytes == straight.comm_bytes
+
+
+@pytest.mark.slow
+def test_cora_profile_composed_faults_compression_trains_and_audits():
+    """Acceptance row: the cora preset with faults + int8 compression
+    TRAINS under the simulation backend, whose per-round delivered-only
+    byte audit (analytic model vs message log) runs on every round."""
+    from repro.api import get_preset
+
+    cfg = get_preset("cora-gcn-glasu").with_(
+        rounds=4, eval_every=2, backend="simulation",
+        batch_size=16, size_cap=256,
+        faults={"seed": 3, "drop_prob": 0.3, "deadline_ms": 40.0,
+                "base_latency_ms": 5.0},
+        compression={"method": "int8", "error_feedback": True})
+    res = Trainer(cfg).run()
+    assert res.rounds_run == 4
+    losses = [h["loss"] for h in res.history]
+    assert losses and np.isfinite(losses).all()
+    assert res.comm_bytes > 0
+
+
+# ------------------------------------------------ fault-support contract
+def test_run_step_sequential_rejects_backend_without_fault_support():
+    """A backend that never declared the fault contract must fail loudly
+    when handed plans instead of silently training fault-free."""
+    from repro.api.backends import run_step_sequential
+
+    class LegacyBackend:
+        name = "legacy"
+
+        def run_round(self, params, opt_state, batch, key, **kw):
+            raise AssertionError("must not be reached")
+
+    plans = _trace(FaultSchedule(CHAOTIC, 3), 2)
+    with pytest.raises(ValueError, match="supports_faults"):
+        run_step_sequential(LegacyBackend(), None, None, None,
+                            keys=[None, None], faults=plans)
+
+
+def test_trainer_rejects_fault_schedule_on_unsupporting_backend(monkeypatch):
+    """Satellite of the same contract: the Trainer refuses the pairing at
+    config time, before any round runs."""
+    from repro.api import backends as backends_mod
+
+    monkeypatch.setattr(backends_mod.VmappedBackend, "supports_faults",
+                        False)
+    with pytest.raises(ValueError, match="supports_faults"):
+        Trainer(_cfg(faults={"seed": 1, "participation": 0.67}))
 
 
 def test_backend_rejects_faults_on_fault_free_bind():

@@ -1,0 +1,49 @@
+"""Unified-engine golden parity: every legacy engine, frozen.
+
+The fixtures under ``tests/golden/`` hold final parameters, loss
+histories and sidecar carries produced by the three legacy hand-synced
+round engines (vmapped, sharded, simulation — each with its plain /
+compressed / fault-tolerant variants) immediately before they were
+unified into the single policy-parameterized round body. Replaying each
+combo through the unified body and comparing against the stored arrays
+pins the refactor: the vmapped and simulation paths must be BITWISE
+identical (same ops in the same order on the same host), the sharded
+path float32-ULP close (its shard_map lowering fuses differently across
+XLA builds — the same tolerance class as ``SHARD_TOL`` in the
+conformance suite).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import golden_runners as gr
+
+SHARD_TOL = dict(rtol=5e-5, atol=5e-5)
+
+
+def _load(name):
+    path = os.path.join(gr.GOLDEN_DIR, f"{name}.npz")
+    if not os.path.exists(path):
+        pytest.fail(f"golden fixture missing: {path} — regenerate with "
+                    f"`PYTHONPATH=src python tests/golden_runners.py --write`")
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.mark.parametrize("name", gr.EXACT)
+def test_golden_bitwise(name):
+    got = gr.COMBOS[name]()
+    want = _load(name)
+    assert sorted(got) == sorted(want)
+    for k in sorted(want):
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+@pytest.mark.parametrize("name", gr.CLOSE)
+def test_golden_ulp(name):
+    got = gr.COMBOS[name]()
+    want = _load(name)
+    assert sorted(got) == sorted(want)
+    for k in sorted(want):
+        np.testing.assert_allclose(got[k], want[k], err_msg=k, **SHARD_TOL)

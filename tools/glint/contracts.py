@@ -11,15 +11,22 @@ see:
          ``debug_print`` or implicit transfer serializes every dispatch)
   GL203  buffer donation effective: each donated leaf of the multi-round
          step fns produces an input-output aliasing in the lowered IR
-         (broken donation doubles parameter HBM traffic per step)
+         (broken donation doubles parameter HBM traffic per step) — run
+         once per execution policy, so a policy whose extra carry (EF
+         accumulators, fault caches) breaks aliasing fails here
   GL204  the sharded round body's embedding collectives match the byte
          meter term by term: per-client wire bytes summed over ``all_gather``
          eqns equal the sum of ``CollectiveRecord.up_bytes`` (a drifted
-         meter is a static failure here, not a benchmark drift)
+         meter is a static failure here, not a benchmark drift) — run
+         once per execution policy (plain / compressed / fault-tolerant /
+         composed)
 
 Entry points register in ``ENTRY_POINTS``; adding a public round/serve/
 kernel builder without registering it is itself a finding (GL200-style
-coverage is enforced in ``tests/test_glint.py``).
+coverage is enforced in ``tests/test_glint.py``), and every execution
+policy of the unified round body (``core.glasu.ExecPolicy``) must ship a
+registered traceable entry for both multi-round builders
+(``_check_policy_coverage``).
 """
 from __future__ import annotations
 
@@ -171,42 +178,89 @@ def _collect_gathers(closed):
     return out
 
 
-def _check_collectives_vs_meter(compression=None) -> List[Finding]:
-    """GL204: trace the sharded round body, compare its all_gather set
-    against the CollectiveRecords the byte meter emits for the same trace."""
+# the ExecPolicy grid of the unified round body (core.glasu._round_body):
+# identity/int8 codec x all-present/fault-tolerant participation. Every
+# combination must ship a registered traceable entry for both multi-round
+# builders — _check_policy_coverage fails the run otherwise.
+POLICY_COMBOS = ("plain", "int8", "faults", "int8+faults")
+
+
+def _policy_cfg(policy: str):
+    """The fixture config under one execution-policy combination."""
     import dataclasses
+    from repro.comm.compression import CompressionConfig
+
+    cfg = _fixture()["cfg"]
+    if "int8" in policy:
+        cfg = dataclasses.replace(
+            cfg, compression=CompressionConfig(method="int8"))
+    if "faults" in policy:
+        cfg = dataclasses.replace(cfg, fault_tolerant=True)
+    return cfg
+
+
+def _policy_args(cfg, k: int | None = None):
+    """Abstract call args of a (multi-)round builder under ``cfg``'s
+    policy: ``params, opt_state, [comp_state,] [fault_state,] batch(es),
+    key(s)[, faults]`` — the unified builder signature."""
+    import jax
+
+    fx = _fixture()
+    glasu = fx["glasu"]
+    args = [fx["params"], fx["opt_state"]]
+    if cfg.compression is not None and cfg.compression.active:
+        args.append(jax.eval_shape(lambda: glasu.init_comp_state(
+            cfg, fx["sampler"].layer_sizes)))
+    if cfg.fault_tolerant:
+        args.append(jax.eval_shape(lambda: glasu.init_fault_state(
+            cfg, fx["sampler"].layer_sizes)))
+    if k is None:
+        args += [fx["batch"], fx["key"]]
+    else:
+        args += [_stack_rounds(fx["batch"], k), _keys_abs(k)]
+    if cfg.fault_tolerant:
+        shape = (cfg.n_clients,) if k is None else (k, cfg.n_clients)
+        mask = jax.ShapeDtypeStruct(shape, "float32")
+        args.append(glasu.RoundFaults(mask, mask))
+    return tuple(args)
+
+
+def _n_donated_leaves(cfg, args) -> int:
+    """params + opt_state + every active carry (the donate_argnums set of
+    the unified multi-round builders)."""
+    import jax
+    n_carries = 2 + int(cfg.compression is not None
+                        and cfg.compression.active) + int(cfg.fault_tolerant)
+    return len(jax.tree.leaves(args[:n_carries]))
+
+
+def _check_collectives_vs_meter(policy: str = "plain") -> List[Finding]:
+    """GL204: trace the sharded round body under one execution policy,
+    compare its all_gather set against the CollectiveRecords the byte
+    meter emits for the same trace."""
     import jax
     from repro.launch.mesh import make_client_mesh
 
     fx = _fixture()
     glasu = fx["glasu"]
-    cfg = fx["cfg"]
+    cfg = _policy_cfg(policy)
     where = "src/repro/core/glasu.py"
-    if compression is not None:
-        cfg = dataclasses.replace(cfg, compression=compression)
     mesh = make_client_mesh(cfg.n_clients)
     records = []
     fn = glasu.make_sharded_round_fn(cfg, fx["opt"], mesh,
                                      record=records.append, jit=False)
-    if compression is None:
-        args = (fx["params"], fx["opt_state"], fx["batch"], fx["key"])
-    else:
-        comp_abs = jax.eval_shape(lambda: glasu.init_comp_state(
-            cfg, fx["sampler"].layer_sizes))
-        args = (fx["params"], fx["opt_state"], comp_abs, fx["batch"],
-                fx["key"])
+    args = _policy_args(cfg)
     with mesh:
         closed = jax.make_jaxpr(fn)(*args)
 
-    name = "make_sharded_round_fn" + \
-        ("" if compression is None else f"[{compression.method}]")
+    name = f"make_sharded_round_fn[{policy}]"
     out = []
     if not records:
         return [Finding("GL204", where, 1,
                         f"{name}: byte meter recorded no collectives")]
     # embedding exchanges are >=2-D payloads; the 1-D all_gather is the
-    # Q-scalar loss diagnostic, explicitly unmetered (see
-    # _sharded_local_update_steps docstring)
+    # Q-scalar loss diagnostic, explicitly unmetered (see the
+    # local_update_steps docstring)
     payload = [b for b, nd in _collect_gathers(closed) if nd >= 2]
     metered = sum(r.up_bytes for r in records)
     traced = sum(payload)
@@ -234,16 +288,15 @@ def _ep_round_fn():
     return closed, None
 
 
-def _ep_multi_round_fn():
+def _ep_multi_round_fn(policy: str = "plain"):
     import jax
     fx = _fixture()
+    cfg = _policy_cfg(policy)
     k = 2
-    fn = fx["glasu"].make_multi_round_fn(fx["cfg"], fx["opt"])
-    args = (fx["params"], fx["opt_state"], _stack_rounds(fx["batch"], k),
-            _keys_abs(k))
+    fn = fx["glasu"].make_multi_round_fn(cfg, fx["opt"])
+    args = _policy_args(cfg, k=k)
     closed = jax.make_jaxpr(fn)(*args)
-    n_leaves = len(jax.tree.leaves((fx["params"], fx["opt_state"])))
-    return closed, (fn, args, n_leaves)
+    return closed, (fn, args, _n_donated_leaves(cfg, args))
 
 
 def _ep_sharded_round_fn():
@@ -259,20 +312,20 @@ def _ep_sharded_round_fn():
     return closed, None
 
 
-def _ep_sharded_multi_round_fn():
+def _ep_sharded_multi_round_fn(policy: str = "plain"):
     import jax
     from repro.launch.mesh import make_client_mesh
     fx = _fixture()
+    cfg = _policy_cfg(policy)
     k = 2
-    mesh = make_client_mesh(fx["cfg"].n_clients)
-    fn = fx["glasu"].make_sharded_multi_round_fn(fx["cfg"], fx["opt"], mesh)
-    args = (fx["params"], fx["opt_state"], _stack_rounds(fx["batch"], k),
-            _keys_abs(k))
+    mesh = make_client_mesh(cfg.n_clients)
+    fn = fx["glasu"].make_sharded_multi_round_fn(cfg, fx["opt"], mesh)
+    args = _policy_args(cfg, k=k)
     with mesh:
         closed = jax.make_jaxpr(fn)(*args)
-        n_leaves = len(jax.tree.leaves((fx["params"], fx["opt_state"])))
-        findings = _check_donation("make_sharded_multi_round_fn", fn, args,
-                                   n_leaves, "src/repro/core/glasu.py")
+        findings = _check_donation(
+            f"make_sharded_multi_round_fn[{policy}]", fn, args,
+            _n_donated_leaves(cfg, args), "src/repro/core/glasu.py")
     return closed, ("inline", findings)
 
 
@@ -391,6 +444,14 @@ ENTRY_POINTS: Dict[str, Tuple[Callable, str]] = {
                               "src/repro/core/glasu.py"),
     "make_sharded_multi_round_fn": (_ep_sharded_multi_round_fn,
                                     "src/repro/core/glasu.py"),
+    # non-plain ExecPolicy combinations of the unified round body: same
+    # builders, extra carries (EF accumulators / fault caches) donated
+    **{f"make_multi_round_fn[{_p}]": (
+        functools.partial(_ep_multi_round_fn, _p),
+        "src/repro/core/glasu.py") for _p in POLICY_COMBOS[1:]},
+    **{f"make_sharded_multi_round_fn[{_p}]": (
+        functools.partial(_ep_sharded_multi_round_fn, _p),
+        "src/repro/core/glasu.py") for _p in POLICY_COMBOS[1:]},
     "make_sharded_joint_fn": (_ep_sharded_joint_fn,
                               "src/repro/core/glasu.py"),
     "make_sharded_serve_fn": (_ep_sharded_serve_fn,
@@ -407,10 +468,31 @@ ENTRY_POINTS: Dict[str, Tuple[Callable, str]] = {
 }
 
 
+def _check_policy_coverage() -> List[Finding]:
+    """Every ExecPolicy combination of the unified round body must ship a
+    registered traceable entry for both multi-round builders — the jit
+    boundaries the Trainer actually dispatches. A policy added to
+    ``POLICY_COMBOS`` without its entries is a finding, not a silent gap
+    in contract coverage."""
+    out = []
+    for pol in POLICY_COMBOS:
+        for base in ("make_multi_round_fn", "make_sharded_multi_round_fn"):
+            key = base if pol == "plain" else f"{base}[{pol}]"
+            if key not in ENTRY_POINTS:
+                out.append(Finding(
+                    "GL200", "tools/glint/contracts.py", 1,
+                    f"execution policy {pol!r} ships without a registered "
+                    f"traceable entry for {base} — GL203/GL204 never run "
+                    f"against that combination"))
+    return out
+
+
 def run_contracts(names=None):
     """Run the GL2xx layer. Returns ``(findings, report)``."""
     findings: List[Finding] = []
     checked = []
+    if names is None:
+        findings.extend(_check_policy_coverage())
     for name, (builder, where) in ENTRY_POINTS.items():
         if names is not None and name not in names:
             continue
@@ -427,10 +509,8 @@ def run_contracts(names=None):
                                             where))
         checked.append(name)
     if names is None or "collectives" in (names or ()):
-        findings.extend(_check_collectives_vs_meter())
-        from repro.comm.compression import CompressionConfig
-        findings.extend(_check_collectives_vs_meter(
-            CompressionConfig(method="int8")))
+        for pol in POLICY_COMBOS:
+            findings.extend(_check_collectives_vs_meter(pol))
         checked.append("collectives-vs-meter")
     report = {"entry_points": checked}
     return findings, report
