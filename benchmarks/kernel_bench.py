@@ -222,6 +222,69 @@ def _bench_graph_agg():
                 "vectorized graph_agg must beat the seed kernel"
 
 
+def _bench_csr_crossover():
+    """Dense one-hot vs CSR segment-sum across power-law source-set sizes.
+
+    Each sweep point draws its topology from the same Chung-Lu generator as
+    the ``powerlaw-1m`` profile (``graph/synth.py``), so the measured
+    crossover reflects that profile's degree skew, not a uniform-random
+    gather. Both kernels see identical (h, idx, mask, w) inputs — the CSR
+    path re-lays the fanout tables as edge slabs in-trace, exactly what
+    ``ops.graph_agg`` dispatches to at scale.
+
+    The gate names the winner at every shape instead of reducing to one
+    scalar: the dense one-hot matmul must hold the sampler-capped set size
+    (512) and CSR must win at and above ``ops.CSR_DISPATCH_MIN_SRC`` —
+    i.e. the static-shape dispatch heuristic routes every swept shape to
+    its measured winner.
+    """
+    from repro.graph.graph import scatter_neighbor_rows
+    from repro.graph.synth import _pairs_to_csr, _powerlaw_pairs
+
+    rng = np.random.default_rng(3)
+    n_dst, fanout, d = 512, 8, 64
+    dense_fn = jax.jit(ops._graph_agg)
+    sparse_fn = jax.jit(ops._graph_agg_sparse)
+    results = []
+    for n_src in (512, 2048, 8192, 16384, 32768):
+        pairs = _powerlaw_pairs(rng, n_src, 8.0, 2.1, 1024)
+        indptr, indices = _pairs_to_csr(n_src, pairs)
+        # destination rows: the first n_dst nodes (batch); sources span the
+        # whole set — the shape the sampler hands the aggregation layer
+        dst_indptr = indptr[:n_dst + 1]
+        idx = np.zeros((n_dst, fanout), np.int32)
+        mask = np.zeros((n_dst, fanout), np.float32)
+        idx[:, 0] = np.arange(n_dst, dtype=np.int32)
+        mask[:, 0] = 1.0
+        scatter_neighbor_rows(idx, dst_indptr, indices, np.diff(dst_indptr),
+                              fanout - 1, rng, col_offset=1, mask=mask)
+        h = jnp.asarray(rng.normal(size=(n_src, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+        idx, mask = jnp.asarray(idx), jnp.asarray(mask)
+        np.testing.assert_allclose(
+            np.asarray(sparse_fn(h, idx, mask, w)),
+            np.asarray(dense_fn(h, idx, mask, w)), atol=1e-4)
+        us_dense = _time(dense_fn, h, idx, mask, w)
+        us_csr = _time(sparse_fn, h, idx, mask, w)
+        winner = "csr" if us_csr < us_dense else "dense"
+        dispatch = ("csr" if n_src >= ops.CSR_DISPATCH_MIN_SRC else "dense")
+        results.append((n_src, winner, dispatch))
+        print(f"kernel/agg_crossover_s{n_src},winner={winner},"
+              f"dense_us={us_dense:.0f},csr_us={us_csr:.0f},"
+              f"dispatch={dispatch}")
+    crossover = min((s for s, w, _ in results if w == "csr"), default=None)
+    print(f"kernel/agg_crossover_size,{crossover},"
+          f"dispatch_min_src={ops.CSR_DISPATCH_MIN_SRC}")
+    assert results[0][1] == "dense", \
+        "one-hot matmul must win at the sampler-capped set size (512)"
+    for n_src, winner, dispatch in results:
+        if n_src >= ops.CSR_DISPATCH_MIN_SRC:
+            assert winner == "csr", (
+                f"CSR segment-sum must beat the dense one-hot path at "
+                f"n_src={n_src} (>= dispatch threshold "
+                f"{ops.CSR_DISPATCH_MIN_SRC}), but {winner} won")
+
+
 def _bench_backbone_parity():
     """Parity of all three fused backbone kernels vs kernels/ref.py."""
     rng = np.random.default_rng(1)
@@ -358,6 +421,7 @@ def _bench_sampler_allocs(rounds: int = 10):
 
 def run():
     _bench_graph_agg()
+    _bench_csr_crossover()
     _bench_backbone_parity()
     _bench_sampler()
     _bench_sampler_allocs()

@@ -128,6 +128,13 @@ class ExperimentConfig:
             err("n_local_steps (Q) must be >= 1")
         if self.rounds < 0:
             err("rounds must be >= 0")   # 0 = eval-only run
+        if self.eval_every < 0:
+            err("eval_every must be >= 0 (0 = no exact eval; the only "
+                "option for streamed-store datasets, whose features never "
+                "materialize)")
+        if self.eval_every == 0 and self.target_acc is not None:
+            err("target_acc early stopping needs periodic exact eval; set "
+                "eval_every > 0")
         if self.rounds_per_step < 1:
             err("rounds_per_step must be >= 1")
         if self.prefetch_buffers < 1:

@@ -54,4 +54,20 @@ def _register_paper_grid() -> None:
                     n_local_steps=q, rounds=200, lr=0.01, eval_every=25))
 
 
+def _register_scale_profiles() -> None:
+    """ROADMAP-scale streamed-store profiles (graph/synth.py POWERLAW_SPECS).
+
+    The 2^20-node power-law graph routes ``graph_agg`` to the CSR
+    segment-sum kernel and streams features through ``MemmapFeatureStore``
+    column views. Exact full-graph eval would materialize all N feature
+    rows, so the preset ships with ``eval_every=0`` (loss-only rounds);
+    ``benchmarks/train_bench`` gates the profile's RSS and completion.
+    """
+    register_preset(ExperimentConfig(
+        name="powerlaw1m-gcn-glasu", dataset="powerlaw-1m",
+        method="glasu", backbone="gcn", n_clients=2, n_layers=2, hidden=32,
+        n_local_steps=1, rounds=50, lr=0.01, eval_every=0, table_cap=8))
+
+
 _register_paper_grid()
+_register_scale_profiles()

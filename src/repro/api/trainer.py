@@ -428,7 +428,11 @@ class Trainer:
         self.hooks: List[Hook] = [CommMeterHook()]
         if self.fault_sched is not None:
             self.hooks.append(ParticipationHook())
-        self.hooks.append(EvalHook())
+        if cfg.eval_every > 0:
+            # eval_every == 0 skips exact full-graph eval entirely — the
+            # contract for streamed-store datasets (powerlaw-* profiles),
+            # where _eval_tables would materialize all N feature rows
+            self.hooks.append(EvalHook())
         if cfg.target_acc is not None:
             self.hooks.append(EarlyStopHook(cfg.target_acc))
         if cfg.ckpt_dir is not None:

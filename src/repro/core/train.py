@@ -41,19 +41,35 @@ class TrainResult:
     params: Optional[dict] = None
 
 
-def _eval_tables(data: VFLDataset, cap: int, seed: int):
+def _eval_neighbor_tables(data: VFLDataset, cap: int, seed: int):
+    """Per-client padded eval neighbor tables only (no feature staging) —
+    the piece of ``_eval_tables`` that streamed-store datasets can still
+    afford; rng consumption order matches ``_eval_tables`` exactly."""
     rng = np.random.default_rng(seed)
-    idx, mask, feats = [], [], []
-    d_pad = max(c.feat_dim for c in data.clients)
+    idx, mask = [], []
     for c in data.clients:
         i, m = c.padded_neighbor_table(cap, rng)
         idx.append(i)
         mask.append(m)
+    return jnp.asarray(np.stack(idx)), jnp.asarray(np.stack(mask))
+
+
+def _eval_tables(data: VFLDataset, cap: int, seed: int):
+    from ..graph.feature_store import is_streamed
+    if any(is_streamed(c.features) for c in data.clients):
+        raise RuntimeError(
+            "exact full-graph evaluation materializes all (M, N, d_pad) "
+            "features on device, which defeats a streamed feature store; "
+            f"dataset {data.name!r} must be served/benched through "
+            "row-gather paths (sampler rounds, serve plans) instead")
+    nbr_idx, nbr_mask = _eval_neighbor_tables(data, cap, seed)
+    d_pad = max(c.feat_dim for c in data.clients)
+    feats = []
+    for c in data.clients:
         x = np.zeros((c.n_nodes, d_pad), np.float32)
         x[:, :c.feat_dim] = c.features
         feats.append(x)
-    return (jnp.asarray(np.stack(feats)), jnp.asarray(np.stack(idx)),
-            jnp.asarray(np.stack(mask)))
+    return jnp.asarray(np.stack(feats)), nbr_idx, nbr_mask
 
 
 def make_optimizer(cfg: TrainConfig) -> opt_lib.Optimizer:

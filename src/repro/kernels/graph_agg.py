@@ -131,6 +131,106 @@ def graph_agg_pallas(h, idx, mask, w, *, interpret: bool = True):
     return out[:n_dst, :d_out]
 
 
+# ----------------------------------------------------------- CSR / sparse
+# The one-hot kernel above builds a (128, n_src) scatter matrix per tile —
+# O(n_dst·n_src·d) dense MXU work, perfect while the sampler caps n_src at
+# size_cap (512) but quadratic-looking the moment the source set grows
+# toward graph scale. The CSR path replaces it with a per-tile *edge slab*:
+# the host planner lays the CSR out as (n_tiles, slab) edge blocks — tile i
+# owns destination rows [128i, 128i+128) and exactly its own edges, padded
+# to a uniform slab length — so each program touches O(slab·d) work
+# regardless of n_src. Assignment runs as a (128, slab) comparison matrix
+# against the LOCAL destination row of each edge (sentinel 128 = padding,
+# matches no row), making the kernel grid-position-free: no program_id, no
+# SMEM scalars, safe under the core's client-axis vmap exactly like the
+# dense kernels. The source-row gather is a vector ``jnp.take`` — the one
+# TPU-adaptation point (lowers via Mosaic dynamic-gather; interpret mode on
+# CPU executes it as XLA gather).
+
+CSR_PAD_ROW = DST_BLOCK          # local-seg sentinel: matches no tile row
+
+
+def ell_to_slabs(idx, mask):
+    """Padded-fanout (ELL) tables -> the kernel's slab layout, traceable.
+
+    idx/mask: (n_dst, F) — the sampler's gather tables. Every row owns
+    exactly F slots, so the slab is the uniform 128·F and the conversion is
+    pure reshapes/iota (jit-safe; this is the in-trace dispatch path of
+    ``ops.graph_agg``). Masked-off entries become weight-0 edges — the
+    denominator clamp keeps the masked-mean semantics bitwise.
+    """
+    n_dst, fanout = idx.shape
+    idx = _pad_rows(idx, DST_BLOCK)
+    mask = _pad_rows(mask, DST_BLOCK)
+    n_pad = idx.shape[0]
+    n_tiles = n_pad // DST_BLOCK
+    slab = DST_BLOCK * fanout
+    local = jnp.broadcast_to(
+        (jnp.arange(n_pad, dtype=jnp.int32) % DST_BLOCK)[:, None],
+        (n_pad, fanout))
+    idx_slab = idx.astype(jnp.int32).reshape(n_tiles * slab, 1)
+    seg_slab = local.reshape(n_tiles * slab, 1)
+    ew_slab = mask.astype(jnp.float32).reshape(n_tiles * slab, 1)
+    return idx_slab, seg_slab, ew_slab, n_dst
+
+
+def _csr_agg_kernel(idx_ref, seg_ref, ew_ref, h_ref, w_ref, out_ref):
+    """One (dst tile, d_out tile) program over the tile's edge slab."""
+    seg = jnp.transpose(seg_ref[...])                   # (1, slab) local row
+    ew = jnp.transpose(ew_ref[...]).astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (DST_BLOCK, seg.shape[1]), 0)
+    a = jnp.where(rows == seg, ew, 0.0)                 # (128, slab)
+    gathered = jnp.take(h_ref[...].astype(jnp.float32), idx_ref[...][:, 0],
+                        axis=0)                         # (slab, d)
+    s = jnp.dot(a, gathered, preferred_element_type=jnp.float32)
+    denom = jnp.maximum(jnp.sum(a, axis=1, keepdims=True), 1.0)
+    out_ref[...] = jnp.dot((s / denom).astype(w_ref.dtype), w_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+def graph_agg_csr_pallas(h, idx_slab, seg_slab, ew_slab, w, n_dst: int, *,
+                         interpret: bool = True):
+    """CSR segment-mean + matmul over the planned slab layout.
+
+    h: (n_src, d); idx/seg/ew slabs: (n_tiles*slab, 1) from
+    ``graph.csr_plan.plan_csr_slabs`` / ``ell_to_slabs``; w: (d, d_out)
+    -> (n_dst, d_out).
+    Grid is (dst tiles, d_out tiles); each program reads ONE tile's edge
+    slab and one weight tile — VMEM per program is slab·(2·4B) + n_src·d·4B
+    for the shared source rows + the (128, slab) assignment matrix.
+    """
+    d = h.shape[1]
+    d_out = w.shape[1]
+    bo = _dout_block(d_out)
+    wp = _pad_cols(w, bo)
+    n_tiles = max(1, -(-n_dst // DST_BLOCK))
+    slab = idx_slab.shape[0] // n_tiles
+    grid = (n_tiles, wp.shape[1] // bo)
+    out = pl.pallas_call(
+        _csr_agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((slab, 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),                # edge srcs
+            pl.BlockSpec((slab, 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),                # local rows
+            pl.BlockSpec((slab, 1), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),                # weights
+            pl.BlockSpec((h.shape[0], d), lambda i, j: (0, 0),
+                         memory_space=pltpu.VMEM),                # sources
+            pl.BlockSpec((d, bo), lambda i, j: (0, j),
+                         memory_space=pltpu.VMEM),                # W tile
+        ],
+        out_specs=pl.BlockSpec((DST_BLOCK, bo), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * DST_BLOCK, wp.shape[1]),
+                                       w.dtype),
+        interpret=interpret,
+    )(idx_slab, seg_slab, ew_slab, h, wp)
+    return out[:n_dst, :d_out]
+
+
 # -------------------------------------------------------------------- GCNII
 def _gcnii_kernel(idx_ref, mask_ref, h_ref, h0_ref, w_ref, b_ref, col_ref,
                   out_ref, *, alpha, beta, block_out):

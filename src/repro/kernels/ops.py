@@ -17,14 +17,29 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from ..graph.csr_plan import csr_slot_map, plan_csr_slabs
 from . import ref
 from .flash_attention import flash_attention_pallas
-from .graph_agg import gat_layer_pallas, gcnii_layer_pallas, graph_agg_pallas
+from .graph_agg import (ell_to_slabs, gat_layer_pallas, gcnii_layer_pallas,
+                        graph_agg_csr_pallas, graph_agg_pallas)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# Density heuristic for ``graph_agg``: the one-hot scatter matrix costs
+# O(n_dst·n_src·d) MXU work and (128, n_src) VMEM per tile — unbeatable
+# while the sampler caps n_src at size_cap (512), hopeless at graph scale.
+# Above this source-set size the padded-fanout tables are re-laid out as
+# CSR edge slabs in-trace (``ell_to_slabs``) and the segment-sum kernel
+# runs instead. The threshold is deliberately ABOVE every shipped profile
+# (largest eval source set: reddit, 8192 rows), so all existing golden /
+# conformance fixtures stay on the dense path bitwise; kernel_bench
+# measures the true crossover per shape and gates that CSR wins above it.
+CSR_DISPATCH_MIN_SRC = 16384
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
@@ -50,6 +65,78 @@ def _graph_agg_bwd(res, g):
 
 
 _graph_agg.defvjp(_graph_agg_fwd, _graph_agg_bwd)
+
+
+# sparse twin of ``_graph_agg``: same (h, idx, mask, w) contract, forward
+# re-lays the fanout tables out as CSR edge slabs and runs the segment-sum
+# kernel; backward differentiates the SAME dense oracle (identical algebra,
+# so dense- and CSR-dispatched training produce matching gradients)
+@jax.custom_vjp
+def _graph_agg_sparse(h, idx, mask, w):
+    idx_s, seg_s, ew_s, n_dst = ell_to_slabs(idx, mask)
+    return graph_agg_csr_pallas(h, idx_s, seg_s, ew_s, w, n_dst,
+                                interpret=_interpret())
+
+
+def _graph_agg_sparse_fwd(h, idx, mask, w):
+    return _graph_agg_sparse(h, idx, mask, w), (h, idx, mask, w)
+
+
+_graph_agg_sparse.defvjp(_graph_agg_sparse_fwd, _graph_agg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _graph_agg_csr(h, idx_slab, seg_slab, ew_slab, w, n_dst):
+    return graph_agg_csr_pallas(h, idx_slab, seg_slab, ew_slab, w, n_dst,
+                                interpret=_interpret())
+
+
+def _graph_agg_csr_fwd(h, idx_slab, seg_slab, ew_slab, w, n_dst):
+    out = graph_agg_csr_pallas(h, idx_slab, seg_slab, ew_slab, w, n_dst,
+                               interpret=_interpret())
+    return out, (h, idx_slab, seg_slab, ew_slab, w)
+
+
+def _graph_agg_csr_bwd(n_dst, res, g):
+    fn = lambda *a: ref.csr_slab_ref(*a, n_dst)
+    _, vjp = jax.vjp(fn, *res)
+    return vjp(g)
+
+
+_graph_agg_csr.defvjp(_graph_agg_csr_fwd, _graph_agg_csr_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst",))
+def _graph_agg_csr_jit(h, idx_slab, seg_slab, ew_slab, w, n_dst):
+    return _graph_agg_csr(h, idx_slab, seg_slab, ew_slab, w, n_dst)
+
+
+def graph_agg_csr(h, indptr, indices, w, edge_weight=None):
+    """Sparse aggregation over a host CSR: segment-mean of ``h`` rows per
+    destination, fused with the weight matmul.
+
+    ``indptr``/``indices`` are CONCRETE (numpy) — the slab planner runs on
+    host, exactly like the sampler's table builds; the jitted kernel sees
+    only the padded static-shape slab arrays (one compile per (shapes,
+    n_dst) signature). Differentiable wrt ``h``/``w``/``edge_weight``; the
+    backward pass differentiates ``ref.csr_slab_ref`` (the same segment-sum
+    algebra, XLA-fused). Oracle: ``ref.graph_agg_csr_ref``.
+    """
+    idx_s, seg_s, ew_s, n_dst = plan_csr_slabs(indptr, indices)
+    if edge_weight is not None:
+        # keep the traced edge weights out of the host planner: scatter the
+        # (nnz,) weights into the padded slab with the planner's slot map
+        ew_s = _scatter_edge_weights(indptr, idx_s.shape[0], edge_weight)
+    return _graph_agg_csr_jit(h, idx_s, seg_s, ew_s, w, n_dst)
+
+
+def _scatter_edge_weights(indptr, total, edge_weight):
+    """(nnz,) traced weights -> (total, 1) slab array via the concrete
+    slot map (host planning in ``graph.csr_plan``, device scatter here)."""
+    slot = csr_slot_map(indptr, total)
+    ew = jnp.zeros((total,), jnp.float32)
+    ew = ew.at[jnp.asarray(slot)].set(edge_weight.astype(jnp.float32))
+    return ew[:, None]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -95,7 +182,17 @@ _gat_layer.defvjp(_gat_layer_fwd, _gat_layer_bwd)
 
 @jax.jit
 def graph_agg(h, idx, mask, w):
-    """Masked-mean neighbor gather fused with the weight matmul (GCN core)."""
+    """Masked-mean neighbor gather fused with the weight matmul (GCN core).
+
+    Dispatches on the STATIC source-set size: small sets (every training /
+    eval profile shipped today) run the one-hot scatter-matrix kernel;
+    sets at or above ``CSR_DISPATCH_MIN_SRC`` run the CSR segment-sum
+    kernel over in-trace edge slabs. Both paths share the dense oracle's
+    backward, and the decision is a trace-time shape check — no runtime
+    branch, no retrace beyond the usual shape signature.
+    """
+    if h.shape[0] >= CSR_DISPATCH_MIN_SRC:
+        return _graph_agg_sparse(h, idx, mask, w)
     return _graph_agg(h, idx, mask, w)
 
 

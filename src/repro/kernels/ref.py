@@ -6,6 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..graph.csr_plan import csr_segments
+
 
 def graph_agg_ref(h, idx, mask, w):
     """GLASU client sub-layer hotspot: masked-mean neighbor gather + matmul.
@@ -16,6 +18,60 @@ def graph_agg_ref(h, idx, mask, w):
     s = jnp.sum(g * mask[..., None], axis=1)
     denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
     return (s / denom) @ w
+
+
+def graph_agg_csr_ref(h, indptr, indices, w, edge_weight=None):
+    """CSR oracle for the sparse aggregation path: segment-mean + matmul.
+
+    h: (n_src, d); indptr: (n_dst+1,) CONCRETE numpy (host CSR — the sparse
+    structure is data the planner consumes, never a traced value); indices:
+    (nnz,) source ids; w: (d, d_out); edge_weight: optional (nnz,) f32
+    (defaults to 1, i.e. an unweighted mean). Zero-degree rows produce
+    exactly zero output (the clamped denominator of the dense path's
+    masked mean), so CSR and one-hot results agree bitwise in structure.
+
+    Differentiable wrt ``h``/``w``/``edge_weight`` — the custom_vjp
+    backward of the public op differentiates the same segment-sum algebra
+    (``csr_slab_ref``) over the kernel's padded slab layout.
+    """
+    n_dst = len(indptr) - 1
+    seg = jnp.asarray(csr_segments(indptr))
+    ew = (jnp.ones(indices.shape[0], jnp.float32) if edge_weight is None
+          else edge_weight.astype(jnp.float32))
+    g = jnp.take(h.astype(jnp.float32), indices, axis=0)    # (nnz, d)
+    s = jax.ops.segment_sum(g * ew[:, None], seg, num_segments=n_dst)
+    denom = jnp.maximum(
+        jax.ops.segment_sum(ew, seg, num_segments=n_dst), 1.0)
+    return ((s / denom[:, None]).astype(w.dtype) @ w)
+
+
+def csr_slab_ref(h, idx_slab, seg_slab, ew_slab, w, n_dst: int):
+    """Segment-sum oracle over the kernel's padded row-tile slab layout.
+
+    idx_slab/seg_slab/ew_slab: (n_tiles*slab, 1) — seg holds the LOCAL
+    destination row within its 128-row tile (128 = padding sentinel). The
+    global segment id is reconstructed from the slab position, padding
+    edges land in a scratch bucket past the last row. Algebraically equal
+    to ``graph_agg_csr_ref`` on the unpadded CSR; this is the function the
+    CSR kernel's ``custom_vjp`` backward differentiates (traceable — no
+    concrete indptr needed).
+    """
+    from .graph_agg import DST_BLOCK
+    total = idx_slab.shape[0]
+    n_tiles = -(-n_dst // DST_BLOCK)
+    slab = total // n_tiles
+    n_pad = n_tiles * DST_BLOCK
+    tile = jnp.arange(total, dtype=jnp.int32) // slab
+    seg = seg_slab[:, 0]
+    seg_global = jnp.where(seg < DST_BLOCK, seg + DST_BLOCK * tile, n_pad)
+    ew = ew_slab[:, 0].astype(jnp.float32)
+    g = jnp.take(h.astype(jnp.float32), idx_slab[:, 0], axis=0)
+    s = jax.ops.segment_sum(g * ew[:, None], seg_global,
+                            num_segments=n_pad + 1)[:n_dst]
+    denom = jnp.maximum(
+        jax.ops.segment_sum(ew, seg_global, num_segments=n_pad + 1)[:n_dst],
+        1.0)
+    return ((s / denom[:, None]).astype(w.dtype) @ w)
 
 
 def gcnii_layer_ref(h, h0, idx, mask, w, b, alpha: float, beta: float):

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 
 from ..comm.compression import make_compressor
 from ..core import checkpoint, glasu
-from ..core.train import _eval_tables
+from ..core.train import _eval_neighbor_tables, _eval_tables
+from ..graph.feature_store import is_streamed
 from ..graph.sampler import SampledBatch
 from .cache import HotNodeCache
 from .config import ServeConfig
@@ -100,10 +101,20 @@ class InferenceSession:
         self.M, self.L, self.N = m.n_clients, m.n_layers, data.n_nodes
         self.h_agg = m.hidden * (self.M if m.agg == "concat" else 1)
         self._down_h = self.h_agg
-        feats, nbr_idx, nbr_mask = _eval_tables(
-            data, config.eval_table_cap, config.seed)
-        self._feats_dev = feats                       # (M, N, d_pad) device
-        self._np_feats = np.asarray(feats)
+        self._d_pad = max(c.feat_dim for c in data.clients)
+        self._streamed = any(is_streamed(c.features) for c in data.clients)
+        if self._streamed:
+            # streamed store: neighbor tables only; level-0 features are
+            # gathered per plan through the store's LRU (never all N rows)
+            nbr_idx, nbr_mask = _eval_neighbor_tables(
+                data, config.eval_table_cap, config.seed)
+            self._feats_dev = None
+            self._np_feats = None
+        else:
+            feats, nbr_idx, nbr_mask = _eval_tables(
+                data, config.eval_table_cap, config.seed)
+            self._feats_dev = feats                   # (M, N, d_pad) device
+            self._np_feats = np.asarray(feats)
         self._nbr_idx = np.asarray(nbr_idx)           # (M, N, W)
         self._nbr_mask = np.asarray(nbr_mask)
         self._nbr_idx_dev = nbr_idx
@@ -283,11 +294,14 @@ class InferenceSession:
 
         src0 = sets[0]
         if sizes[0] == N:
+            if self._streamed:
+                raise RuntimeError(
+                    "query plan reached the identity set at level 0, which "
+                    "a streamed feature store cannot materialize; lower the "
+                    "serve buckets / eval_table_cap for this graph scale")
             feats = self._feats_dev          # resident; no per-query copy
         else:
-            f = (self._np_feats[:, np.maximum(src0, 0), :]
-                 * (src0 >= 0)[None, :, None].astype(np.float32))
-            feats = jnp.asarray(f)
+            feats = jnp.asarray(self._gather_feats(src0))
         # labels are a dead input on the serve path; stage one zeros vector
         # per bucket explicitly (jnp.zeros here would upload its scalar
         # fill constant on every cold dispatch — transfer_guard trips on it)
@@ -302,6 +316,20 @@ class InferenceSession:
                       for l, (k, r) in inject.items()}
         return QueryPlan(batch=batch, inject=inject_dev, fresh=fresh,
                          fills=fills)
+
+    def _gather_feats(self, src0: np.ndarray) -> np.ndarray:
+        """(M, n, d_pad) level-0 feature block for one plan: resident-array
+        slice on small graphs, per-client store row gather when streamed
+        (only the plan's rows ever leave disk)."""
+        valid = (src0 >= 0).astype(np.float32)[None, :, None]
+        if not self._streamed:
+            return self._np_feats[:, np.maximum(src0, 0), :] * valid
+        safe = np.maximum(src0, 0)
+        f = np.zeros((self.M, len(src0), self._d_pad), np.float32)
+        for m, c in enumerate(self.data.clients):
+            rows = c.features[safe]
+            f[m, :, :rows.shape[1]] = rows
+        return f * valid
 
     # ----------------------------------------------------------- serving
     def _wire(self, n: int, d: int) -> int:
@@ -447,6 +475,11 @@ class InferenceSession:
         The collected aggregate stacks carry exactly the N real nodes
         (pad rows are sliced off before aggregation), so chunk padding
         can never enter the cache."""
+        if self._streamed:
+            raise RuntimeError(
+                "precompute() sweeps full_forward over all N nodes with "
+                "resident features; a streamed-store session warms its "
+                "cache through served queries instead")
         with self._lock:
             logits, aggs = glasu.full_forward(
                 self.params, self.mcfg, self._feats_dev,

@@ -134,8 +134,12 @@ def test_from_dict_rejects_unknown_fields():
 # ------------------------------------------------------------------ presets
 def test_preset_grid_complete():
     names = list_presets()
-    assert len(names) == 45                     # 3 datasets x 3 backbones x 5
+    # 3 datasets x 3 backbones x 5 methods + the powerlaw-1m scale profile
+    assert len(names) == 46
     assert "cora-gcnii-glasu" in names
+    assert "powerlaw1m-gcn-glasu" in names
+    scale = get_preset("powerlaw1m-gcn-glasu")
+    assert scale.eval_every == 0 and scale.dataset == "powerlaw-1m"
     glasu = get_preset("cora-gcnii-glasu")
     assert glasu.n_local_steps == 4 and glasu.agg_layers == (1, 3)
     assert get_preset("citeseer-gcn-standalone").agg_layers == ()

@@ -1,0 +1,252 @@
+"""Streamed feature store + power-law profile properties.
+
+The million-node path has three contracts, each pinned here at the
+``powerlaw-tiny`` scale (same code path, 4096 nodes):
+
+  * ``MemmapFeatureStore`` gathers are bitwise-equal to the backing file,
+    the LRU stays bounded, and whole-matrix materialization fails loudly;
+  * sampler invariants on power-law graphs — sampled neighbor sets are
+    subsets of the true neighborhoods, ``_build_set`` emits no duplicates,
+    and the position LUT round-trips;
+  * a streamed-store training round is bitwise-identical to the same round
+    on fully materialized features, and runs under ``transfer_guard`` with
+    no implicit host transfer inside the jitted round body.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.graph.feature_store import (MemmapFeatureStore, create_store,
+                                       is_streamed)
+from repro.graph.sampler import GlasuSampler, SamplerConfig
+from repro.graph.synth import POWERLAW_SPECS, make_vfl_dataset
+
+
+@pytest.fixture(scope="module")
+def tiny_powerlaw(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("powerlaw"))
+    return make_vfl_dataset("powerlaw-tiny", n_clients=2, seed=0), root
+
+
+def _materialized_twin(data):
+    """Same dataset with every streamed store replaced by the resident
+    column block it views — the bitwise ground truth."""
+    raw = np.load(data.full.features.path)
+    def swap(g):
+        lo, hi = g.features._cols
+        return dataclasses.replace(g, features=raw[:, lo:hi].copy())
+    return dataclasses.replace(
+        data, clients=[swap(c) for c in data.clients], full=swap(data.full))
+
+
+# ------------------------------------------------------------------ store
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), chunk_rows=st.integers(3, 40))
+def test_store_gather_bitwise_equals_backing_file(seed, chunk_rows):
+    # NOTE: the _hypothesis_compat fallback @given cannot compose with
+    # pytest fixtures, so the temp dir comes from tempfile directly
+    import tempfile
+    rng = np.random.default_rng(seed)
+    n, d = 257, 6                       # non-multiple of any chunk size
+    path = os.path.join(tempfile.mkdtemp(prefix="repro_store_"),
+                        f"s{seed}.npy")
+    mm = create_store(path, n, d)
+    ref = rng.normal(size=(n, d)).astype(np.float32)
+    mm[:] = ref
+    mm.flush()
+    del mm
+    store = MemmapFeatureStore(path, chunk_rows=chunk_rows, cache_chunks=3)
+    rows = rng.integers(0, n, size=50)
+    np.testing.assert_array_equal(store[rows], ref[rows])
+    # repeated + shuffled gathers hit the LRU, stay bitwise
+    np.testing.assert_array_equal(store[rows[::-1]], ref[rows[::-1]])
+    # column views slice the same file without copying it
+    lo, hi = 2, 5
+    np.testing.assert_array_equal(store.view(lo, hi)[rows], ref[rows, lo:hi])
+    # scalar + 2-D id gathers keep their shapes
+    np.testing.assert_array_equal(store[int(rows[0])], ref[rows[0]])
+    np.testing.assert_array_equal(store[rows.reshape(10, 5)],
+                                  ref[rows].reshape(10, 5, d))
+
+
+def test_store_lru_stays_bounded(tmp_path):
+    path = os.path.join(str(tmp_path), "lru.npy")
+    mm = create_store(path, 1000, 4)
+    mm[:] = np.arange(4000, dtype=np.float32).reshape(1000, 4)
+    mm.flush()
+    del mm
+    store = MemmapFeatureStore(path, chunk_rows=10, cache_chunks=3)
+    for r0 in range(0, 1000, 10):       # touch all 100 chunks
+        store[np.arange(r0, r0 + 10)]
+    assert len(store._cache) <= store.cache_chunks == 3
+    assert store.cache_misses == 100
+    hits0 = store.cache_hits
+    store[np.arange(990, 1000)]         # resident chunk: pure hit
+    assert store.cache_hits == hits0 + 1 and store.cache_misses == 100
+    store.drop_cache()
+    assert len(store._cache) == 0
+
+
+def test_store_fails_loudly_instead_of_materializing(tmp_path):
+    path = os.path.join(str(tmp_path), "loud.npy")
+    mm = create_store(path, 64, 4)
+    mm[:] = 1.0
+    mm.flush()
+    del mm
+    store = MemmapFeatureStore(path, chunk_rows=8, cache_chunks=2)
+    with pytest.raises(TypeError, match="refusing to materialize"):
+        np.asarray(store)
+    with pytest.raises(IndexError, match="out of range"):
+        store[np.array([0, 64])]
+    with pytest.raises(IndexError, match="out of range"):
+        store[np.array([-1])]
+    # the sanctioned whole-matrix path reconstructs the file exactly
+    full = np.concatenate([c for _, c in store.iter_chunks()])
+    np.testing.assert_array_equal(full, np.load(path))
+
+
+# -------------------------------------------------------------- power law
+def test_powerlaw_graph_structural_invariants(tiny_powerlaw):
+    data, _ = tiny_powerlaw
+    spec = POWERLAW_SPECS["powerlaw-tiny"]
+    g = data.full
+    assert g.n_nodes == spec.n_nodes
+    deg = g.degrees()
+    assert deg.sum() == len(g.indices)
+    assert g.indices.min() >= 0 and g.indices.max() < g.n_nodes
+    assert deg.max() <= spec.max_deg + 1
+    # undirected: the edge-key multiset is symmetric
+    src = np.repeat(np.arange(g.n_nodes), deg)
+    fwd = np.sort(src.astype(np.int64) * g.n_nodes + g.indices)  # glint: disable=GL003 edge-key packing needs 64-bit headroom; host-only
+    rev = np.sort(g.indices.astype(np.int64) * g.n_nodes + src)  # glint: disable=GL003 edge-key packing needs 64-bit headroom; host-only
+    np.testing.assert_array_equal(fwd, rev)
+    # heavy-tailed: top-1% of nodes carry well above a uniform share
+    top = np.sort(deg)[-(g.n_nodes // 100):]
+    assert top.sum() > 3 * deg.sum() // 100
+    assert is_streamed(g.features) and is_streamed(data.clients[0].features)
+    # rebuild with the same seed is bitwise deterministic
+    twin = make_vfl_dataset("powerlaw-tiny", n_clients=2, seed=0)
+    np.testing.assert_array_equal(twin.full.indptr, g.indptr)
+    np.testing.assert_array_equal(twin.full.indices, g.indices)
+    np.testing.assert_array_equal(twin.full.labels, g.labels)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234, 8507])
+def test_sampler_invariants_on_powerlaw(tiny_powerlaw, seed):
+    """Alg-2 sampler on a power-law graph: per-client sampled neighbors are
+    true neighbors, node sets are duplicate-free with centers first, and
+    the position LUT round-trips."""
+    data, _ = tiny_powerlaw
+    cfg = SamplerConfig(n_layers=2, agg_layers=(1,), batch_size=8,
+                        fanout=3, size_cap=96, table_cap=8)
+    s = GlasuSampler(data, cfg, seed=seed)
+    centers = np.tile(s.rng.choice(data.full.train_idx, size=8), (s.M, 1))
+    nbrs = s._sample_neighbors_all(centers.astype(np.int32))
+    for m in range(s.M):
+        true = [set(data.clients[m].neighbors(int(c))) for c in centers[m]]
+        for i in range(centers.shape[1]):
+            drawn = set(int(v) for v in nbrs[m, i] if v >= 0)
+            assert drawn <= true[i], \
+                f"client {m} drew non-neighbors {drawn - true[i]}"
+            # -1 only for isolated nodes in this client's edge subsample
+            if not true[i]:
+                assert (nbrs[m, i] == -1).all()
+    sset = s._build_set([centers[0]], [nbrs[0]], cfg.size_cap)
+    valid = sset[sset >= 0]
+    assert len(valid) == len(np.unique(valid)), "duplicate ids after dedup"
+    assert set(np.unique(centers[0])) <= set(valid), "center dropped"
+    pos = s._positions(sset, valid)
+    np.testing.assert_array_equal(sset[pos], valid)     # LUT round-trip
+    assert (s._pos_lut == -1).all() and (s._mark == 0).all()  # scratch reset
+
+
+def test_streamed_round_bitwise_equals_materialized(tiny_powerlaw):
+    """The whole point of the store: a sampled round gathered through the
+    LRU chunks must be byte-identical to the same round on resident
+    features."""
+    data, _ = tiny_powerlaw
+    twin = _materialized_twin(data)
+    cfg = SamplerConfig(n_layers=2, agg_layers=(1,), batch_size=8,
+                        fanout=3, size_cap=96, table_cap=8)
+    s_stream = GlasuSampler(data, cfg, seed=3)
+    s_resident = GlasuSampler(twin, cfg, seed=3)
+    for _ in range(3):
+        a, b = s_stream.sample_round(), s_resident.sample_round()
+        np.testing.assert_array_equal(a.feats, b.feats)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        for l in range(a.n_layers):
+            np.testing.assert_array_equal(a.gather_idx[l], b.gather_idx[l])
+            np.testing.assert_array_equal(a.gather_mask[l], b.gather_mask[l])
+            np.testing.assert_array_equal(a.row_valid[l], b.row_valid[l])
+            np.testing.assert_array_equal(a.self_pos[l], b.self_pos[l])
+
+
+# ------------------------------------------------------- training contracts
+def test_streamed_round_has_no_implicit_transfers(tiny_powerlaw,
+                                                  transfer_guard):
+    """Store gathers happen on host BEFORE staging; the jitted round body
+    must not smuggle a host->device copy (the GL-contract behind the 1M
+    train_bench smoke)."""
+    from repro.api.backends import make_backend
+    from repro.api.config import ExperimentConfig
+    from repro.core import glasu
+
+    data, _ = tiny_powerlaw
+    cfg = ExperimentConfig(
+        name="streamed-guard", dataset="powerlaw-tiny", n_clients=2,
+        n_layers=2, hidden=16, backbone="gcn", batch_size=8, fanout=3,
+        size_cap=96, table_cap=8, rounds=0, eval_every=0)
+    mcfg = cfg.glasu_config(data)
+    optimizer = cfg.make_optimizer()
+    sampler = GlasuSampler(data, cfg.sampler_config(), seed=0)
+    backend = make_backend("vmapped")
+    backend.bind(mcfg, optimizer, sampler)
+    params = glasu.init_params(jax.random.PRNGKey(0), mcfg)
+    opt_state = optimizer.init(params)
+    key = jax.random.PRNGKey(1)
+    # warmup OUTSIDE the guard: compilation may stage closure constants
+    batch = jax.tree.map(jnp.array, sampler.sample_round())
+    out = backend.run_round(params, opt_state, batch, key)
+    jax.block_until_ready(out.losses)
+    keys = [jax.random.fold_in(key, t) for t in range(2)]  # pre-staged
+    with transfer_guard():
+        for t in range(2):
+            batch = jax.tree.map(np.array, sampler.sample_round())
+            out = backend.run_round(out.params, out.opt_state,
+                                    jax.device_put(batch), keys[t])
+        jax.block_until_ready(out.losses)
+    assert np.isfinite(float(jax.device_get(out.losses)[-1]))
+
+
+def test_trainer_end_to_end_on_streamed_profile(tiny_powerlaw):
+    """Full Trainer run with eval_every=0 (the streamed-store contract):
+    completes, loss finite, and the exact-eval path refuses to run."""
+    from repro.api.config import ExperimentConfig
+    from repro.api.trainer import Trainer
+    from repro.core.train import _eval_tables
+
+    data, _ = tiny_powerlaw
+    cfg = ExperimentConfig(
+        name="streamed-e2e", dataset="powerlaw-tiny", n_clients=2,
+        n_layers=2, hidden=16, backbone="gcn", batch_size=8, fanout=3,
+        size_cap=96, table_cap=8, rounds=3, eval_every=0, lr=0.02)
+    tr = Trainer(cfg, data=data)
+    res = tr.run()
+    assert res.rounds_run == 3
+    assert res.history == []            # no EvalHook registered
+    assert np.isfinite(float(jax.device_get(tr.state.last_losses)[-1]))
+    with pytest.raises(RuntimeError, match="streamed feature store"):
+        _eval_tables(data, cap=8, seed=0)
+
+
+def test_eval_every_zero_validation():
+    from repro.api.config import ExperimentConfig
+    with pytest.raises(ValueError, match="eval_every"):
+        ExperimentConfig(name="bad", eval_every=-1)
+    with pytest.raises(ValueError, match="target_acc"):
+        ExperimentConfig(name="bad", eval_every=0, target_acc=0.5)

@@ -397,6 +397,27 @@ def _ep_graph_agg_kernel():
     return closed, None
 
 
+def _ep_graph_agg_csr_kernel():
+    import jax
+    import numpy as np
+    from repro.graph.csr_plan import plan_csr_slabs
+    from repro.kernels.graph_agg import graph_agg_csr_pallas
+    # a tiny concrete CSR: the slab planner is host-side, so the traced
+    # entry is the kernel over the planned static-shape slab arrays
+    indptr = np.array([0, 2, 2, 5, 6], np.int32)        # zero-degree row 1
+    indices = np.array([1, 3, 0, 2, 3, 1], np.int32)
+    idx_s, seg_s, ew_s, n_dst = plan_csr_slabs(indptr, indices)
+    h = jax.ShapeDtypeStruct((4, 8), "float32")
+    w = jax.ShapeDtypeStruct((8, 8), "float32")
+    slabs = [jax.ShapeDtypeStruct(a.shape, a.dtype.name)
+             for a in (idx_s, seg_s, ew_s)]
+    closed = jax.make_jaxpr(
+        lambda h_, i_, s_, e_, w_: graph_agg_csr_pallas(h_, i_, s_, e_, w_,
+                                                        n_dst))(
+            h, *slabs, w)
+    return closed, None
+
+
 def _ep_gcnii_kernel():
     import jax
     from repro.kernels.graph_agg import gcnii_layer_pallas
@@ -460,6 +481,8 @@ ENTRY_POINTS: Dict[str, Tuple[Callable, str]] = {
     "full_forward": (_ep_full_forward, "src/repro/core/glasu.py"),
     "graph_agg_pallas": (_ep_graph_agg_kernel,
                          "src/repro/kernels/graph_agg.py"),
+    "graph_agg_csr_pallas": (_ep_graph_agg_csr_kernel,
+                             "src/repro/kernels/graph_agg.py"),
     "gcnii_layer_pallas": (_ep_gcnii_kernel,
                            "src/repro/kernels/graph_agg.py"),
     "gat_layer_pallas": (_ep_gat_kernel, "src/repro/kernels/graph_agg.py"),
